@@ -1,0 +1,107 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Roofline calibration: correct XLA cost_analysis for scan-over-layers.
+
+XLA counts a while-loop body ONCE, so a scanned L-layer stack reports ~1
+layer of FLOPs/bytes.  For every (arch × cell) whose program scans layers we
+lower two reduced-depth UNROLLED variants (L1, L2 layers, full width) on the
+single-pod mesh and extrapolate:
+
+    per_layer = (m(L2) − m(L1)) / (L2 − L1)
+    corrected = m(L1) + per_layer × (L_full − L1)
+
+Corrections are cached to results/dryrun/calib/<arch>__<cell>.json and
+consumed by benchmarks.roofline_report.
+
+    PYTHONPATH=src python -m benchmarks.calibrate [--force]
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.configs.base import SHAPE_CELLS
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch import dryrun as dr
+
+CALIB_DIR = os.path.join(dr.RESULTS_DIR, "calib")
+
+
+def _measure(arch: str, cell_name: str, n_layers: int, lower_kw: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    kw = dict(n_layers=n_layers, scan_layers=False)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = n_layers
+    cfg_small = dataclasses.replace(cfg, **kw)
+    lowered, meta, mesh = dr.lower_cell(arch, cell_name, multi_pod=False,
+                                        cfg_override=cfg_small, **(lower_kw or {}))
+    compiled = lowered.compile()
+    ca = dr._cost_analysis(compiled)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = dr.parse_collectives(hlo)
+    return {
+        "flops": ca.get("flops", 0.0),
+        "bytes": ca.get("bytes accessed", 0.0),
+        "wire": coll["total_wire_bytes"],
+    }
+
+
+def calibrate(arch: str, cell_name: str, force: bool = False, tag: str = "",
+              lower_kw: dict | None = None) -> dict | None:
+    cfg = get_config(arch)
+    uses_scan = (cfg.uniform and cfg.scan_layers) or cfg.encoder_layers or cfg.period_scan
+    if not uses_scan:
+        return None   # python-unrolled path: cost_analysis already complete
+    if cell_name == "long_500k" and arch not in dr.LONG_OK:
+        return None
+    os.makedirs(CALIB_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(CALIB_DIR, f"{arch}__{cell_name}{suffix}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    p = len(cfg.layer_pattern)
+    L1, L2 = (2, 4) if p == 1 else (p, 2 * p)   # full periods for hybrids
+    t0 = time.time()
+    # hillclimb-variant lowers must not pass scan_group (calibration unrolls)
+    lk = {k: v for k, v in (lower_kw or {}).items() if k not in ("scan_group",)}
+    m1 = _measure(arch, cell_name, L1, lk)
+    m2 = _measure(arch, cell_name, L2, lk)
+    L = cfg.n_layers
+    out = {"arch": arch, "cell": cell_name, "L1": L1, "L2": L2, "L": L}
+    for k in ("flops", "bytes", "wire"):
+        per_layer = (m2[k] - m1[k]) / (L2 - L1)
+        out[f"{k}_per_layer"] = per_layer
+        out[f"{k}_base"] = m1[k] - L1 * per_layer
+        out[f"{k}_corrected"] = m1[k] + per_layer * (L - L1)
+    out["seconds"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[calib {arch} × {cell_name}] flops={out['flops_corrected']:.3e} "
+          f"bytes={out['bytes_corrected']:.3e} wire={out['wire_corrected']:.3e} "
+          f"({out['seconds']}s)")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--arch", default=None)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    n = 0
+    for arch in archs:
+        for cell in SHAPE_CELLS:
+            try:
+                if calibrate(arch, cell.name, force=args.force):
+                    n += 1
+            except Exception as e:
+                print(f"[calib {arch} × {cell.name}] FAIL {type(e).__name__}: {e}")
+    print(f"calibrated {n} (arch × cell) pairs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Shared benchmark harness: paper-recipe instances at two scales.
+
+Default scale finishes on one CPU in minutes (same generator/ratios as the
+paper's Table II, smaller counts + budgets); ``--full`` reproduces the
+paper-scale parameters (tasks∈[200,300], data∈[500,700], T=600 s/instance).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import TSParams, random_instance
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scale:
+    n_tasks: tuple[int, int]
+    n_data: tuple[int, int]
+    n_instances: int
+    ts: TSParams
+
+    def instance(self, seed: int, **kw):
+        rng = np.random.default_rng(seed)
+        kw.setdefault("n_tasks", int(rng.integers(*self.n_tasks)))
+        kw.setdefault("n_data", int(rng.integers(*self.n_data)))
+        return random_instance(seed, **kw)
+
+
+def scale(full: bool) -> Scale:
+    if full:
+        return Scale(
+            n_tasks=(200, 301), n_data=(500, 701), n_instances=10,
+            ts=TSParams(max_unimproved=100_000, time_limit=600.0, top_k=100),
+        )
+    return Scale(
+        n_tasks=(50, 81), n_data=(120, 181), n_instances=3,
+        ts=TSParams(max_unimproved=80, time_limit=8.0, top_k=8),
+    )
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The scaffold's CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.monotonic() - self.t0

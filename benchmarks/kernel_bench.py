@@ -1,0 +1,82 @@
+"""Kernel micro-benchmarks (CPU timings of the XLA-level paths; the Pallas
+kernels are TPU-target and validated via interpret mode, so wall-clock here
+measures the jnp/XLA fallbacks that the dry-run lowers)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_xla import flash_attention_xla
+
+from .common import emit
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters * 1e6  # us
+
+
+def bench_attention():
+    key = jax.random.PRNGKey(0)
+    b, s, h, kvh, d = 2, 2048, 8, 2, 64
+    q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(key, (b, s, kvh, d), jnp.float32)
+    v = jax.random.normal(key, (b, s, kvh, d), jnp.float32)
+    flops = 4 * b * s * s * h * d / 2  # causal
+
+    naive = jax.jit(lambda q, k, v: ref.attention_reference(q, k, v, causal=True))
+    us = _time(naive, q, k, v)
+    emit("attn_naive_2k", us, f"gflops/s={flops/us/1e3:.1f}")
+
+    flash = jax.jit(lambda q, k, v: flash_attention_xla(q, k, v, True, None, 0, None, 256))
+    us = _time(flash, q, k, v)
+    emit("attn_flash_xla_2k", us, f"gflops/s={flops/us/1e3:.1f}")
+
+    gfn = jax.jit(jax.grad(lambda q, k, v: (flash_attention_xla(q, k, v, True, None, 0, None, 256) ** 2).sum(), argnums=(0, 1, 2)))
+    us = _time(gfn, q, k, v)
+    emit("attn_flash_xla_2k_bwd", us, f"gflops/s={3*flops/us/1e3:.1f}")
+
+
+def bench_rglru():
+    key = jax.random.PRNGKey(1)
+    b, t, d = 4, 2048, 512
+    x = jax.random.normal(key, (b, t, d))
+    ap = jax.random.normal(key, (d,))
+    g = jax.nn.sigmoid(jax.random.normal(key, (b, t, d)))
+    fn = jax.jit(lambda x, ap, g: ref.rglru_reference(x, ap, g, g)[0])
+    us = _time(fn, x, ap, g)
+    emit("rglru_ref_2k", us, f"gbytes/s={(4*b*t*d*4)/us/1e3:.2f}")
+
+
+def bench_ssd():
+    key = jax.random.PRNGKey(2)
+    b, t, h, p, g, n = 2, 2048, 8, 64, 1, 128
+    x = jax.random.normal(key, (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(key, (b, t, h)))
+    alog = 0.5 * jax.random.normal(key, (h,))
+    bm = 0.3 * jax.random.normal(key, (b, t, g, n))
+    cm = 0.3 * jax.random.normal(key, (b, t, g, n))
+    naive = jax.jit(lambda *a: ref.ssd_reference(*a)[0])
+    chunked = jax.jit(lambda *a: ref.ssd_chunked_reference(*a, chunk=128)[0])
+    us_n = _time(naive, x, dt, alog, bm, cm)
+    us_c = _time(chunked, x, dt, alog, bm, cm)
+    emit("ssd_naive_2k", us_n, "sequential scan")
+    emit("ssd_chunked_2k", us_c, f"speedup_vs_naive={us_n/us_c:.1f}x")
+
+
+def main():
+    bench_attention()
+    bench_rglru()
+    bench_ssd()
+
+
+if __name__ == "__main__":
+    main()

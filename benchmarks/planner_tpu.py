@@ -1,0 +1,64 @@
+"""Planner-on-TPU-graphs benchmark: the paper's algorithms applied to the
+extracted model MDFGs (residency + pipeline), TS vs greedy vs LB."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import SHAPE_CELLS
+from repro.configs.registry import get_config
+from repro.plan import plan_pipeline, plan_residency, plan_residency_lb
+
+from .common import emit, save_json
+
+TRAIN = SHAPE_CELLS[0]
+
+
+def bench_residency(archs=("llama3-405b", "mixtral-8x7b", "recurrentgemma-2b", "mamba2-780m")):
+    rows = []
+    for arch in archs:
+        cfg = get_config(arch)
+        opt = "adafactor" if arch == "llama3-405b" else "adamw"
+        t0 = time.monotonic()
+        ts_plan = plan_residency(cfg, TRAIN, optimizer=opt)
+        lb_plan = plan_residency_lb(cfg, TRAIN, optimizer=opt)
+        sec = time.monotonic() - t0
+        imp = 1 - ts_plan.est_step_time / lb_plan.est_step_time
+        rows.append({
+            "arch": arch, "scan_group": ts_plan.scan_group,
+            "save": ts_plan.save_names, "offload": ts_plan.offload_names,
+            "ts_step_s": ts_plan.est_step_time, "lb_step_s": lb_plan.est_step_time,
+            "improvement": imp, "plan_sec": sec,
+        })
+        emit(f"planner_residency_{arch}", sec * 1e6,
+             f"ts={ts_plan.est_step_time*1e3:.0f}ms lb={lb_plan.est_step_time*1e3:.0f}ms "
+             f"imp={100*imp:.1f}% g={ts_plan.scan_group} save={'|'.join(ts_plan.save_names)}")
+    save_json("planner_residency", rows)
+    return rows
+
+
+def bench_pipeline():
+    cfg = get_config("recurrentgemma-2b")
+    rows = []
+    for speed in (None, np.array([1.0, 1.0, 2.0, 1.0])):
+        out = plan_pipeline(cfg, TRAIN, n_stages=4, n_microbatches=8, stage_speed=speed)
+        label = "uniform" if speed is None else "straggler_s2"
+        imp = 1 - out["est_step_time"] / out["lb_step_time"]
+        rows.append({"case": label, **{k: v for k, v in out.items() if k != "microbatch_order"},
+                     "stage_sizes": np.bincount(out["stage_of_layer"]).tolist()})
+        emit(f"planner_pipeline_{label}", 0.0,
+             f"ts={out['est_step_time']*1e3:.1f}ms lb={out['lb_step_time']*1e3:.1f}ms "
+             f"imp={100*imp:.1f}% stages={np.bincount(out['stage_of_layer']).tolist()}")
+    save_json("planner_pipeline", [{k: (v.tolist() if isinstance(v, np.ndarray) else v)
+                                    for k, v in r.items()} for r in rows])
+    return rows
+
+
+def main():
+    bench_residency()
+    bench_pipeline()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Roofline analysis from dry-run artifacts (results/dryrun/*.json).
+
+Per (arch × cell × mesh):
+    compute    = HLO_FLOPs / (chips × 197 TFLOP/s)
+    memory     = HLO_bytes / (chips × 819 GB/s)
+    collective = wire_bytes / (chips × 50 GB/s/link)
+with the dominant term flagged, MODEL_FLOPS = 6·N·D (6·N_active·D for MoE)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+IMPORTANT scan caveat: XLA's cost_analysis counts a while-loop body ONCE, so
+HLO_FLOPs/bytes for scan-over-layers programs must be corrected by the trip
+counts.  We correct analytically: the per-(group,layer) scan structure is
+known (n_layers / scan_group outer trips × scan_group inner trips), so
+    corrected = non_loop + loop_body × trips
+is obtained by two-point extrapolation over lowered programs with L and 2L
+layers where feasible, and by the trip-count product otherwise.  The
+correction mode is recorded per row.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.registry import get_config
+from repro.plan.cost import HBM_BW, ICI_BW, PEAK_FLOPS
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+CELL_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,         # one token per sequence
+    "long_500k": 1,
+}
+
+
+CALIB_DIR = os.path.join(DRYRUN_DIR, "calib")
+
+
+def scan_correction(rec: dict) -> dict | None:
+    """Calibrated totals for scan-over-layers programs (see calibrate.py).
+
+    Returns {"flops","bytes","wire"} corrected single-pod totals, or None
+    when the program is python-unrolled (already fully counted).  For the
+    2-pod mesh the single-pod calibration is scaled by the measured
+    2pod/1pod ratio of the body-once counts (the nesting structure is the
+    same; only per-shard sizes change)."""
+    cfg = get_config(rec["arch"])
+    uses_scan = (cfg.uniform and cfg.scan_layers) or cfg.encoder_layers or cfg.period_scan
+    if not uses_scan:
+        return None
+    # always the BASE calibration — variant/mesh effects are applied as
+    # body-once ratio scaling in roofline_row (tagged calibs would otherwise
+    # double-count the variant delta)
+    path = os.path.join(CALIB_DIR, f"{rec['arch']}__{rec['cell']}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        cal = json.load(f)
+    return {
+        "flops": cal["flops_corrected"],
+        "bytes": cal["bytes_corrected"],
+        "wire": cal["wire_corrected"],
+    }
+
+
+def model_flops(rec: dict) -> float:
+    cfg = get_config(rec["arch"])
+    n = cfg.active_param_count()
+    tokens = CELL_TOKENS[rec["cell"]]
+    mult = 3.0 if rec["cell"] == "train_4k" else 1.0  # fwd+bwd = 3× fwd 2ND
+    return 2.0 * n * tokens * mult
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec.get("n_devices", 256)
+    ca = rec.get("cost_analysis", {})
+    flops_raw = ca.get("flops", 0.0)
+    bytes_raw = ca.get("bytes accessed", 0.0)
+    wire_raw = rec.get("collectives", {}).get("total_wire_bytes", 0.0)
+    cal = scan_correction(rec)
+    mode = "unrolled" if cal is None else "calibrated"
+    if cal is None:
+        flops_dev, bytes_dev, wire_dev = flops_raw, bytes_raw, wire_raw
+    else:
+        # the calibration captures the BASE 1pod structure; scale it by this
+        # record's body-once ratio vs the base record (covers 2pod meshes and
+        # tagged variants whose effect lives inside the scanned body/carries)
+        base = _onepod_raw(rec)
+        for k, raw in (("flops", flops_raw), ("bytes", bytes_raw), ("wire", wire_raw)):
+            if base and base.get(k):
+                cal[k] *= raw / base[k]
+        flops_dev, bytes_dev, wire_dev = cal["flops"], cal["bytes"], cal["wire"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = wire_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    mf_dev = mf / chips
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "cell": rec["cell"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "t_compute_s": t_compute, "t_memory_s": t_memory, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf_dev,
+        "hlo_flops_per_dev": flops_dev,
+        "useful_ratio": (mf_dev / flops_dev) if flops_dev else 0.0,
+        "roofline_fraction": (mf_dev / PEAK_FLOPS) / bound if bound else 0.0,
+        "temp_bytes": rec.get("memory_analysis", {}).get("temp_size_in_bytes"),
+        "correction": mode,
+    }
+
+
+def _onepod_raw(rec: dict) -> dict | None:
+    path = os.path.join(DRYRUN_DIR, f"{rec['arch']}__{rec['cell']}__1pod.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        r1 = json.load(f)
+    if r1.get("status") != "ok":
+        return None
+    return {
+        "flops": r1.get("cost_analysis", {}).get("flops", 0.0),
+        "bytes": r1.get("cost_analysis", {}).get("bytes accessed", 0.0),
+        "wire": r1.get("collectives", {}).get("total_wire_bytes", 0.0),
+    }
+
+
+def load_rows(pattern: str = "*.json") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | cell | mesh | compute s | memory s | collective s | dominant "
+           "| useful | roofline frac | temp GiB |\n|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        tb = r["temp_bytes"]
+        lines.append(
+            f"| {r['arch']} | {r['cell']}{('+' + r['tag']) if r['tag'] else ''} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3g} | {r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {tb / 2**30:.1f} |" if tb is not None else
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | {r['t_compute_s']:.3g} "
+            f"| {r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} | — |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    rows = load_rows()
+    print(markdown_table(rows))
+    out = os.path.join(DRYRUN_DIR, "..", "roofline.md")
+    with open(out, "w") as f:
+        f.write(markdown_table(rows))
+    print(f"[written {os.path.abspath(out)}; {len(rows)} rows]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Quickstart: train a reduced-config model end-to-end on CPU in ~1 minute.
+
+The full pipeline runs: HDATS planner -> remat policy -> jit train step ->
+checkpointed loop with failure recovery.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.launch.train import train_main
+
+if __name__ == "__main__":
+    train_main([
+        "--arch", "qwen2.5-14b", "--smoke",
+        "--steps", "60", "--batch", "16", "--seq", "64",
+        "--planner", "greedy", "--ckpt-dir", "/tmp/repro_quickstart",
+    ])

@@ -1,0 +1,12 @@
+"""Batched serving: prefill + KV-cache decode (reduced config on CPU).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch.serve import serve_main
+
+if __name__ == "__main__":
+    # a hybrid arch to exercise ring caches + recurrent state, and an MoE
+    serve_main(["--arch", "recurrentgemma-2b", "--smoke",
+                "--batch", "4", "--prompt-len", "48", "--gen", "16"])
+    serve_main(["--arch", "mixtral-8x7b", "--smoke",
+                "--batch", "4", "--prompt-len", "48", "--gen", "16"])

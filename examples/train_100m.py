@@ -1,0 +1,54 @@
+"""Train a ~100M-parameter qwen2.5-family model for a few hundred steps.
+
+This is the end-to-end driver deliverable at "real" (CPU-feasible) scale:
+~112M params, synthetic LM task, loss printed every 10 steps, checkpoints +
+recovery active.  Use --quick for a 30-step CI-sized run.
+
+    PYTHONPATH=src python examples/train_100m.py [--quick]
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import arch_init_params
+from repro.runtime import SyntheticLM, TrainState, adamw, make_train_step
+from repro.runtime.elastic import run_with_recovery
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--quick", action="store_true")
+ap.add_argument("--steps", type=int, default=None)
+args = ap.parse_args()
+
+# ~112M params: qwen2.5 family at width 768 / depth 12 / vocab 32k
+cfg = dataclasses.replace(
+    get_config("qwen2.5-14b"),
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab_size=32_000, dtype="float32",
+)
+params = arch_init_params(cfg, jax.random.PRNGKey(0))
+n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+print(f"[train_100m] params: {n/1e6:.1f}M")
+
+opt = adamw(lr=3e-3, weight_decay=0.01)
+state = TrainState(params=params, opt_state=opt.init(params), step=jnp.int32(0))
+step_fn = jax.jit(make_train_step(cfg, opt))
+data = SyntheticLM(cfg, batch=8, seq_len=128, seed=0)
+batch_at = lambda s: {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+
+steps = args.steps or (30 if args.quick else 300)
+losses = []
+state, _ = run_with_recovery(
+    init_state=state, train_step=step_fn, batch_at=batch_at, n_steps=steps,
+    ckpt_dir="/tmp/repro_100m", ckpt_every=100,
+    on_metrics=lambda s, m: (losses.append(float(m["loss"])),
+                             print(f"step {s} loss {float(m['loss']):.4f}") if s % 10 == 0 else None),
+)
+print(f"[done] loss {losses[0]:.3f} -> {losses[-1]:.3f} over {steps} steps")
+assert losses[-1] < losses[0], "loss must decrease"

@@ -1,0 +1,59 @@
+"""Architecture registry: full configs (exact dims from the brief) + reduced
+smoke variants (same family, tiny dims) for CPU tests."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from .base import ModelConfig
+
+ARCH_IDS = (
+    "whisper-medium",
+    "recurrentgemma-2b",
+    "qwen2.5-14b",
+    "llama3-405b",
+    "qwen1.5-32b",
+    "codeqwen1.5-7b",
+    "mixtral-8x7b",
+    "granite-moe-1b-a400m",
+    "mamba2-780m",
+    "internvl2-26b",
+)
+
+_MODULE_OF = {a: a.replace(".", "_").replace("-", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULE_OF:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_OF[arch_id]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    """Reduced config of the same family: few layers, narrow width, tiny vocab."""
+    cfg = get_config(arch_id)
+    n_layers = min(cfg.n_layers, 4)
+    if len(cfg.layer_pattern) > 1:
+        # ≥2 full pattern periods so the period-scan path is exercised
+        n_layers = max(n_layers, 2 * len(cfg.layer_pattern))
+    kw = dict(
+        n_layers=n_layers,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads else 0,
+        head_dim=32,
+        d_ff=0 if cfg.d_ff == 0 else 256,
+        vocab_size=512,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        lru_width=128 if cfg.lru_width else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state else 64,
+        attn_window=min(cfg.attn_window, 64) if cfg.attn_window else None,
+        encoder_layers=min(cfg.encoder_layers, 2) if cfg.encoder_layers else 0,
+        n_frames=32 if cfg.encoder_layers else 1500,
+        n_vis_tokens=8 if cfg.n_vis_tokens else 0,
+        dtype="float32",
+    )
+    return dataclasses.replace(cfg, **kw)

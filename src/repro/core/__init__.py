@@ -1,0 +1,49 @@
+"""HDATS core — the paper's contribution.
+
+Data allocation + task scheduling on heterogeneous multiprocessor systems
+under memory constraints (Ding et al., 2022): MDFG instances, exact/approx
+schedule evaluation, greedy construction (Alg. 1), tabu search (Alg. 2),
+memory update (Alg. 3), the load-balancing baseline, and the ILP model.
+"""
+from .mdfg import Instance, random_instance, validate_instance
+from .solution import (
+    Schedule,
+    Solution,
+    data_lifetimes,
+    durations,
+    exact_schedule,
+    heads_tails,
+    memory_feasible,
+    memory_peaks,
+)
+from .greedy import STRATEGIES, construct_greedy
+from .load_balance import load_balance
+from .memory_update import memory_update
+from .tabu import Move, TSParams, TSResult, apply_move, critical_blocks, tabu_search
+from .ilp import brute_force_optimum, build_ilp
+
+__all__ = [
+    "Instance",
+    "random_instance",
+    "validate_instance",
+    "Schedule",
+    "Solution",
+    "data_lifetimes",
+    "durations",
+    "exact_schedule",
+    "heads_tails",
+    "memory_feasible",
+    "memory_peaks",
+    "STRATEGIES",
+    "construct_greedy",
+    "load_balance",
+    "memory_update",
+    "Move",
+    "TSParams",
+    "TSResult",
+    "apply_move",
+    "critical_blocks",
+    "tabu_search",
+    "brute_force_optimum",
+    "build_ilp",
+]

@@ -1,0 +1,306 @@
+"""Memory-access data-flow graph (MDFG) — the HDATS problem instance.
+
+Faithful to §III of the paper: a node-weighted DAG of *tasks* (V1) and *data
+blocks* (D), heterogeneous processors P with per-(task, processor) processing
+times PT, memory tiers M with capacities S(M_j) and NUMA access-time function
+AT(P_i, M_j).  Memory-access operations (V2) are represented implicitly as the
+move-in / move-out phases of each task (the ILP in ``ilp.py`` keeps them
+explicit); each task's wall time on processor p under allocation Mem is::
+
+    dur(i, p, Mem) = t_in(i, p, Mem) + PT(i, p) + t_out(i, p, Mem)
+    t_in  = sum_{d in inputs(i)}  size(d) * AT(p, Mem(d))
+    t_out = sum_{d in outputs(i)} size(d) * AT(p, Mem(d))
+
+Everything is stored as flat numpy arrays + CSR-style adjacency for speed —
+the tabu search evaluates thousands of schedules per second on instances with
+hundreds of tasks (paper Table II scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Instance",
+    "random_instance",
+    "validate_instance",
+]
+
+
+def _csr(n_src: int, pairs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Build CSR (indptr, indices) from an (m, 2) array of (src, dst) pairs."""
+    if len(pairs) == 0:
+        return np.zeros(n_src + 1, dtype=np.int64), np.zeros(0, dtype=np.int64)
+    pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
+    counts = np.bincount(pairs[:, 0], minlength=n_src)
+    indptr = np.zeros(n_src + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, pairs[:, 1].astype(np.int64)
+
+
+@dataclasses.dataclass
+class Instance:
+    """One HDATS problem instance (an MDFG + platform description).
+
+    Graph:
+      n_tasks, n_data        — |V1|, |D|
+      task_edges             — (m, 2) direct task→task precedence pairs
+      producer[d]            — task producing data block d (-1 = initial input,
+                               present from t=0)
+      cons_indptr/cons_idx   — CSR: data block d → consumer tasks
+      in_indptr/in_idx       — CSR: task i → input data blocks
+      out_indptr/out_idx     — CSR: task i → output data blocks
+
+    Platform:
+      proc_time[i, p]        — PT(v_i, P_j); np.inf = incompatible core
+      data_size[d]           — block size (capacity units)
+      mem_cap[m]             — S(M_j); np.inf for the unbounded slow tier
+      access_time[p, m]      — AT(P_i, M_j) time per size-unit
+      mem_level[m]           — greedy preference rank (0 = most preferred /
+                               fastest tier; paper's highType2 < highType1 < low)
+      data_mem_ok[d, m]      — compatibility mask (paper: candidate memories for
+                               each block may be a subset)
+    """
+
+    n_tasks: int
+    n_data: int
+    task_edges: np.ndarray
+    producer: np.ndarray
+    cons_indptr: np.ndarray
+    cons_idx: np.ndarray
+    in_indptr: np.ndarray
+    in_idx: np.ndarray
+    out_indptr: np.ndarray
+    out_idx: np.ndarray
+    proc_time: np.ndarray
+    data_size: np.ndarray
+    mem_cap: np.ndarray
+    access_time: np.ndarray
+    mem_level: np.ndarray
+    data_mem_ok: np.ndarray
+    # Combined task→task precedence closure over data (producer → consumer),
+    # deduplicated with task_edges.  CSR, built in __post_init__.
+    pred_indptr: np.ndarray = dataclasses.field(default=None)  # type: ignore[assignment]
+    pred_idx: np.ndarray = dataclasses.field(default=None)  # type: ignore[assignment]
+    succ_indptr: np.ndarray = dataclasses.field(default=None)  # type: ignore[assignment]
+    succ_idx: np.ndarray = dataclasses.field(default=None)  # type: ignore[assignment]
+    name: str = "instance"
+
+    # ------------------------------------------------------------------ #
+    def __post_init__(self) -> None:
+        pairs = [np.asarray(self.task_edges, dtype=np.int64).reshape(-1, 2)]
+        # data-induced precedence: producer(d) → each consumer of d
+        prod = self.producer
+        for d in range(self.n_data):
+            p = prod[d]
+            if p < 0:
+                continue
+            cons = self.cons_idx[self.cons_indptr[d] : self.cons_indptr[d + 1]]
+            if len(cons):
+                pairs.append(np.stack([np.full(len(cons), p, dtype=np.int64), cons], axis=1))
+        allp = np.concatenate(pairs, axis=0) if pairs else np.zeros((0, 2), np.int64)
+        allp = allp[allp[:, 0] != allp[:, 1]]
+        if len(allp):
+            allp = np.unique(allp, axis=0)
+        self.succ_indptr, self.succ_idx = _csr(self.n_tasks, allp)
+        self.pred_indptr, self.pred_idx = _csr(self.n_tasks, allp[:, ::-1] if len(allp) else allp)
+
+    # convenience accessors ------------------------------------------------
+    @property
+    def n_procs(self) -> int:
+        return self.proc_time.shape[1]
+
+    @property
+    def n_mems(self) -> int:
+        return len(self.mem_cap)
+
+    def inputs(self, i: int) -> np.ndarray:
+        return self.in_idx[self.in_indptr[i] : self.in_indptr[i + 1]]
+
+    def outputs(self, i: int) -> np.ndarray:
+        return self.out_idx[self.out_indptr[i] : self.out_indptr[i + 1]]
+
+    def consumers(self, d: int) -> np.ndarray:
+        return self.cons_idx[self.cons_indptr[d] : self.cons_indptr[d + 1]]
+
+    def preds(self, i: int) -> np.ndarray:
+        return self.pred_idx[self.pred_indptr[i] : self.pred_indptr[i + 1]]
+
+    def succs(self, i: int) -> np.ndarray:
+        return self.succ_idx[self.succ_indptr[i] : self.succ_indptr[i + 1]]
+
+    def compatible_procs(self, i: int) -> np.ndarray:
+        return np.nonzero(np.isfinite(self.proc_time[i]))[0]
+
+    def compatible_mems(self, d: int) -> np.ndarray:
+        return np.nonzero(self.data_mem_ok[d])[0]
+
+    def topological_order(self) -> np.ndarray:
+        """Kahn topological order over the task precedence DAG."""
+        indeg = np.diff(self.pred_indptr).astype(np.int64)
+        order = np.empty(self.n_tasks, dtype=np.int64)
+        stack = list(np.nonzero(indeg == 0)[0])
+        k = 0
+        while stack:
+            u = stack.pop()
+            order[k] = u
+            k += 1
+            for v in self.succs(u):
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    stack.append(v)
+        if k != self.n_tasks:
+            raise ValueError("instance precedence graph is cyclic")
+        return order
+
+
+def validate_instance(inst: Instance) -> None:
+    """Sanity checks; raises on malformed instances."""
+    assert inst.proc_time.shape == (inst.n_tasks, inst.n_procs)
+    assert (np.isfinite(inst.proc_time).any(axis=1)).all(), "task with no compatible core"
+    assert inst.data_mem_ok.any(axis=1).all(), "data block with no compatible memory"
+    assert (inst.data_size > 0).all()
+    assert np.isinf(inst.mem_cap).any(), "need an unbounded fallback tier for feasibility"
+    slow_ok = inst.data_mem_ok[:, np.isinf(inst.mem_cap)].any(axis=1)
+    assert slow_ok.all(), "every block must be storable in the unbounded tier"
+    inst.topological_order()  # raises if cyclic
+
+
+# ---------------------------------------------------------------------- #
+# Random instance generator — paper Table II                             #
+# ---------------------------------------------------------------------- #
+def random_instance(
+    rng: np.random.Generator | int = 0,
+    *,
+    n_tasks: int | None = None,
+    n_data: int | None = None,
+    n_fast_cores: int = 2,
+    n_slow_cores: int = 8,
+    edges_per_task: float = 8.0,
+    tin_tproc_tout: Sequence[float] = (7.0, 15.0, 5.0),
+    access_ratio: float = 1.2,          # S_high : S_low speed ⇒ slow-tier time ×1.2
+    fast_mem_fraction: float = 0.2,     # capacity of fast tier / total data volume
+    n_fast_tiers: int = 2,              # paper: highType2 (global) + highType1 (local)
+    slow_core_factor: tuple[float, float] = (1.4, 2.2),
+    core_restrict_prob: float = 0.1,    # fraction of tasks restricted to fast cores
+    data_size_range: tuple[int, int] = (1, 15000),
+    name: str = "random",
+) -> Instance:
+    """Generate an instance following the paper's benchmark recipe (Table II):
+
+    tasks ∈ [200, 300], data blocks ∈ [500, 700], edges ≈ 8 × tasks,
+    2 high-speed + 8 general cores, T_in : T_proc : T_out ≈ 7 : 15 : 5,
+    fast : slow access-time 1 : 1.2, data sizes ∈ [1, 15000], slow tier ∞.
+    """
+    rng = np.random.default_rng(rng)
+    if n_tasks is None:
+        n_tasks = int(rng.integers(200, 301))
+    if n_data is None:
+        n_data = int(rng.integers(500, 701))
+    n_procs = n_fast_cores + n_slow_cores
+
+    # --- DAG over a random topological order --------------------------------
+    # Data blocks carry most dependencies; direct task→task edges add the rest.
+    target_edges = int(edges_per_task * n_tasks)
+    producer = np.full(n_data, -1, dtype=np.int64)
+    cons_pairs: list[tuple[int, int]] = []   # (data, consumer-task)
+    out_pairs: list[tuple[int, int]] = []    # (task, data)
+    n_initial = max(1, n_data // 20)         # ~5% initial inputs (D present at t=0)
+    for d in range(n_data):
+        if d < n_initial:
+            prod = -1
+        else:
+            prod = int(rng.integers(0, max(1, n_tasks - 1)))
+            producer[d] = prod
+            out_pairs.append((prod, d))
+        lo = 0 if prod < 0 else prod + 1
+        n_cons = int(rng.integers(1, 4))
+        cands = rng.integers(lo, n_tasks, size=n_cons)
+        for c in np.unique(cands):
+            cons_pairs.append((d, int(c)))
+
+    n_data_edges = len(cons_pairs) + len(out_pairs)
+    n_task_edges = max(0, target_edges - n_data_edges)
+    te = []
+    for _ in range(n_task_edges):
+        a = int(rng.integers(0, n_tasks - 1))
+        b = int(rng.integers(a + 1, n_tasks))
+        te.append((a, b))
+    task_edges = np.asarray(te, dtype=np.int64).reshape(-1, 2)
+
+    cons_arr = np.asarray(cons_pairs, dtype=np.int64).reshape(-1, 2)
+    out_arr = np.asarray(out_pairs, dtype=np.int64).reshape(-1, 2)
+    cons_indptr, cons_idx = _csr(n_data, cons_arr)
+    in_indptr, in_idx = _csr(n_tasks, cons_arr[:, ::-1])
+    out_indptr, out_idx = _csr(n_tasks, out_arr)
+
+    # --- data sizes, processing times ---------------------------------------
+    data_size = rng.integers(data_size_range[0], data_size_range[1] + 1, size=n_data).astype(
+        np.float64
+    )
+    tin, tproc, tout = tin_tproc_tout
+    base_proc = rng.uniform(0.5 * tproc, 1.5 * tproc, size=n_tasks)
+    speed = np.concatenate(
+        [
+            np.ones(n_fast_cores),
+            rng.uniform(slow_core_factor[0], slow_core_factor[1], size=n_slow_cores),
+        ]
+    )
+    jitter = rng.uniform(0.9, 1.1, size=(n_tasks, n_procs))
+    proc_time = base_proc[:, None] * speed[None, :] * jitter
+    # some tasks only run on fast (synergistic) cores — heterogeneity constraint
+    restricted = rng.random(n_tasks) < core_restrict_prob
+    proc_time[restricted, n_fast_cores:] = np.inf
+
+    # --- memory tiers ---------------------------------------------------------
+    # tiers: [highType2 (global fast), highType1 (local fast), ...] + slow DDR
+    total_vol = float(data_size.sum())
+    n_mems = n_fast_tiers + 1
+    mem_cap = np.empty(n_mems)
+    frac_each = fast_mem_fraction / max(1, n_fast_tiers)
+    mem_cap[:n_fast_tiers] = frac_each * total_vol
+    mem_cap[-1] = np.inf
+    mem_level = np.arange(n_mems)
+
+    # access time per size-unit: calibrated so that mean t_in ≈ `tin` on the
+    # fast tier given mean #inputs per task and mean block size.
+    mean_inputs = max(1e-9, len(cons_pairs) / n_tasks)
+    mean_size = float(data_size.mean())
+    at_fast = tin / (mean_inputs * mean_size)
+    access_time = np.empty((n_procs, n_mems))
+    access_time[:, :n_fast_tiers] = at_fast
+    access_time[:, -1] = at_fast * access_ratio
+    # NUMA jitter: each core is slightly closer to one fast tier than the other
+    access_time *= rng.uniform(0.95, 1.05, size=access_time.shape)
+    # t_out calibration: outputs are fewer; scale via the tout/tin ratio by
+    # boosting output block access implicitly through the generator ratios.
+    # (move-out uses the same AT; the 7:15:5 ratio emerges from edge counts.)
+
+    data_mem_ok = np.ones((n_data, n_mems), dtype=bool)
+    # a small fraction of blocks are DDR-only (e.g. DMA buffers)
+    ddr_only = rng.random(n_data) < 0.05
+    data_mem_ok[ddr_only, :n_fast_tiers] = False
+
+    inst = Instance(
+        n_tasks=n_tasks,
+        n_data=n_data,
+        task_edges=task_edges,
+        producer=producer,
+        cons_indptr=cons_indptr,
+        cons_idx=cons_idx,
+        in_indptr=in_indptr,
+        in_idx=in_idx,
+        out_indptr=out_indptr,
+        out_idx=out_idx,
+        proc_time=proc_time,
+        data_size=data_size,
+        mem_cap=mem_cap,
+        access_time=access_time,
+        mem_level=mem_level,
+        data_mem_ok=data_mem_ok,
+        name=name,
+    )
+    validate_instance(inst)
+    return inst

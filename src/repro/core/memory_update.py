@@ -1,0 +1,115 @@
+"""Memory-update procedure — Algorithm 3 of the paper (§IV-C).
+
+Given a solution whose machine sequences are fixed by local search, rebuild
+the data allocation: start with every block in the slow tier, then repeatedly
+move the *most critical* unplaced block (criticality = number of critical
+tasks that produce or consume it) into the fastest tier whose capacity is
+never exceeded over the block's lifetime (checked with the discretized
+differential array).  The schedule / critical path is recomputed every
+``refresh_every`` placements (=1 reproduces the paper exactly; >1 is the
+amortized mode used inside the tabu loop).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .mdfg import Instance
+from .solution import (
+    Solution,
+    data_lifetimes,
+    exact_schedule,
+    heads_tails,
+)
+
+__all__ = ["memory_update"]
+
+
+def _tier_events(
+    inst: Instance, sol: Solution, birth: np.ndarray, death: np.ndarray
+) -> list[list[tuple[float, float]]]:
+    """Per-tier event lists [(time, +/-size)] for currently assigned blocks."""
+    ev: list[list[tuple[float, float]]] = [[] for _ in range(inst.n_mems)]
+    for d in range(inst.n_data):
+        m = sol.mem[d]
+        if np.isinf(inst.mem_cap[m]):
+            continue
+        s = float(inst.data_size[d])
+        ev[m].append((birth[d], s))
+        ev[m].append((death[d], -s))
+    return ev
+
+
+def _fits(events: list[tuple[float, float]], b: float, e: float, size: float, cap: float) -> bool:
+    evs = events + [(b, size), (e, -size)]
+    evs.sort(key=lambda t: (t[0], t[1]))
+    run = 0.0
+    for _, delta in evs:
+        run += delta
+        if run > cap + 1e-9:
+            return False
+    return True
+
+
+def memory_update(
+    inst: Instance,
+    sol: Solution,
+    refresh_every: int = 8,
+) -> Solution:
+    """Returns a copy of ``sol`` with ``mem`` rebuilt (Alg. 3)."""
+    sol = sol.copy()
+    # line 3: InitMemory — slowest compatible tier for every block
+    slow_rank = np.argsort(-inst.mem_level)
+    for d in range(inst.n_data):
+        for m in slow_rank:
+            if inst.data_mem_ok[d, m]:
+                sol.mem[d] = m
+                break
+
+    fast_order = [int(m) for m in np.argsort(inst.mem_level) if not np.isinf(inst.mem_cap[m])]
+    if not fast_order:
+        return sol
+    # only blocks that *can* live in a finite (fast) tier are candidates
+    data_set = [d for d in range(inst.n_data) if inst.data_mem_ok[d, fast_order].any()]
+
+    sched = exact_schedule(inst, sol)
+    assert sched is not None, "memory_update requires an acyclic solution"
+    _, _, _, crit = heads_tails(inst, sol, sched)
+    birth, death = data_lifetimes(inst, sched)
+    events = _tier_events(inst, sol, birth, death)
+
+    placed_since_refresh = 0
+    pending = set(data_set)
+    while pending:
+        # criticality of each pending block under the current critical path
+        best_d, best_key = -1, None
+        for d in pending:
+            uses = 0
+            p = inst.producer[d]
+            if p >= 0 and crit[p]:
+                uses += 1
+            uses += int(crit[inst.consumers(d)].sum())
+            key = (-uses, float(inst.data_size[d]), d)
+            if best_key is None or key < best_key:
+                best_key, best_d = key, d
+        d = best_d
+        pending.discard(d)
+
+        for m in fast_order:
+            if not inst.data_mem_ok[d, m]:
+                continue
+            if _fits(events[m], birth[d], death[d], float(inst.data_size[d]), float(inst.mem_cap[m])):
+                sol.mem[d] = m
+                events[m].append((birth[d], float(inst.data_size[d])))
+                events[m].append((death[d], -float(inst.data_size[d])))
+                placed_since_refresh += 1
+                break
+        # else: stays in the slow tier (always feasible)
+
+        if placed_since_refresh >= refresh_every and pending:
+            placed_since_refresh = 0
+            sched = exact_schedule(inst, sol)
+            assert sched is not None
+            _, _, _, crit = heads_tails(inst, sol, sched)
+            birth, death = data_lifetimes(inst, sched)
+            events = _tier_events(inst, sol, birth, death)
+    return sol

@@ -1,0 +1,350 @@
+"""Tabu search for HDATS — Algorithm 2 of the paper.
+
+Two-layer local search: the outer layer moves *critical* tasks with the
+classic FJSP neighborhoods — **N7** (reposition inside a critical block on
+the same machine) and **change-core** (k-insertion onto another compatible
+core) — while the inner layer re-allocates memory with Algorithm 3 after each
+accepted move.  Neighbors are ranked with a cheap *approximate evaluation*
+(head/tail window estimate); only the top-K are *exactly* evaluated (full DP)
+— the paper's mixed evaluation strategy (§V-F).  Move attributes are tabu for
+θ1 = m + rand()%(2m) (change-core) / θ2 = n + rand()%n (N7) iterations, with
+the standard aspiration criterion (a tabu move is admissible when it improves
+the best known makespan).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .mdfg import Instance
+from .memory_update import memory_update
+from .solution import Solution, durations, exact_schedule, heads_tails
+
+__all__ = ["TSParams", "TSResult", "tabu_search", "critical_blocks", "Move"]
+
+_WINDOW = 12  # approximate-evaluation look-ahead window (ops)
+
+
+@dataclasses.dataclass
+class TSParams:
+    max_unimproved: int = 400          # λ
+    time_limit: float = 60.0           # T̄ (paper: 600 s)
+    top_k: int = 10                    # K̄ (paper K_max = 100)
+    mem_refresh_every: int = 8         # Alg-3 amortization (1 = paper-exact)
+    mem_update_period: int = 1         # run Alg-3 after every k-th accepted move
+    n_change_core_positions: int = 5   # insertion positions probed per target core
+    perturbation_size: int = 4
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TSResult:
+    best: Solution
+    best_makespan: float
+    initial_makespan: float
+    iterations: int
+    elapsed: float
+    history: list[tuple[int, float]]
+    n_exact_evals: int = 0
+    n_approx_evals: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Move:
+    kind: str          # "n7" | "cc"
+    task: int
+    src_proc: int
+    src_pos: int
+    dst_proc: int
+    dst_pos: int       # index in destination sequence AFTER removal
+
+
+# --------------------------------------------------------------------------- #
+# neighborhood construction                                                    #
+# --------------------------------------------------------------------------- #
+def critical_blocks(sol: Solution, critical: np.ndarray) -> list[tuple[int, int, int]]:
+    """Maximal runs of consecutive critical ops per machine: (proc, lo, hi)."""
+    blocks = []
+    for p, seq in enumerate(sol.proc_seq):
+        lo = None
+        for k, t in enumerate(seq):
+            if critical[t]:
+                if lo is None:
+                    lo = k
+            else:
+                if lo is not None and k - lo >= 2:
+                    blocks.append((p, lo, k - 1))
+                lo = None
+        if lo is not None and len(seq) - lo >= 2:
+            blocks.append((p, lo, len(seq) - 1))
+    return blocks
+
+
+def _n7_moves(sol: Solution, critical: np.ndarray) -> list[Move]:
+    moves = []
+    for p, lo, hi in critical_blocks(sol, critical):
+        seq = sol.proc_seq[p]
+        for k in range(lo, hi + 1):
+            u = seq[k]
+            if k != lo:  # move u to block head
+                moves.append(Move("n7", u, p, k, p, lo))
+            if k != hi:  # move u to block tail (index after removal = hi)
+                moves.append(Move("n7", u, p, k, p, hi))
+    return moves
+
+
+def _cc_moves(
+    inst: Instance,
+    sol: Solution,
+    critical: np.ndarray,
+    r: np.ndarray,
+    starts: np.ndarray,
+    n_positions: int,
+) -> list[Move]:
+    """change-core (k-insertion): critical task → other compatible core,
+    probing a few insertion positions around its head time."""
+    mach, pos = sol.positions(inst.n_tasks)
+    moves = []
+    crit_tasks = np.nonzero(critical)[0]
+    for u in crit_tasks:
+        a = int(mach[u])
+        for b in inst.compatible_procs(u):
+            b = int(b)
+            if b == a:
+                continue
+            seq = sol.proc_seq[b]
+            seq_starts = starts[seq] if seq else np.zeros(0)
+            anchor = int(np.searchsorted(seq_starts, r[u]))
+            lo = max(0, anchor - n_positions // 2)
+            hi = min(len(seq), lo + n_positions)
+            for j in range(lo, hi + 1):
+                moves.append(Move("cc", int(u), a, int(pos[u]), b, j))
+    return moves
+
+
+def apply_move(sol: Solution, move: Move) -> None:
+    seq = sol.proc_seq[move.src_proc]
+    assert seq[move.src_pos] == move.task
+    seq.pop(move.src_pos)
+    sol.proc_seq[move.dst_proc].insert(move.dst_pos, move.task)
+    sol.assign[move.task] = move.dst_proc
+
+
+# --------------------------------------------------------------------------- #
+# approximate evaluation (mixed strategy, fast path)                          #
+# --------------------------------------------------------------------------- #
+def _approx_eval(
+    inst: Instance,
+    sol: Solution,
+    move: Move,
+    r: np.ndarray,
+    q: np.ndarray,
+    dur: np.ndarray,
+    makespan: float,
+) -> float:
+    """Head/tail window estimate of the post-move makespan.
+
+    Recomputes heads along the affected window of the destination sequence
+    (old heads elsewhere), then estimates C'max = max over recomputed ops of
+    R'(x) + Q_old(x).  O(window × mean-degree); deliberately inexact.
+    """
+    u = move.task
+    dst = sol.proc_seq[move.dst_proc]
+    if move.kind == "n7":
+        new_seq = list(dst)
+        new_seq.pop(move.src_pos)
+        new_seq.insert(move.dst_pos, u)
+        w_lo = min(move.src_pos, move.dst_pos)
+        dur_u = dur[u]
+        q_u = q[u]
+    else:
+        new_seq = list(dst)
+        new_seq.insert(move.dst_pos, u)
+        w_lo = move.dst_pos
+        # duration changes with the core (t_in/t_out re-priced via AT)
+        at = inst.access_time
+        t_in = float(
+            (inst.data_size[inst.inputs(u)] * at[move.dst_proc, sol.mem[inst.inputs(u)]]).sum()
+        )
+        t_out = float(
+            (inst.data_size[inst.outputs(u)] * at[move.dst_proc, sol.mem[inst.outputs(u)]]).sum()
+        )
+        dur_u = t_in + inst.proc_time[u, move.dst_proc] + t_out
+        if not np.isfinite(dur_u):
+            return np.inf
+        q_u = q[u] - dur[u] + dur_u
+
+    w_hi = min(len(new_seq), w_lo + _WINDOW)
+    new_r: dict[int, float] = {}
+    est = 0.0
+    prev_finish = 0.0
+    if w_lo > 0:
+        x_prev = new_seq[w_lo - 1]
+        prev_finish = r[x_prev] + dur[x_prev]
+    for k in range(w_lo, w_hi):
+        x = new_seq[k]
+        head = prev_finish
+        for j in inst.preds(x):
+            f = new_r[j] + (dur_u if j == u else dur[j]) if j in new_r else r[j] + dur[j]
+            if f > head:
+                head = f
+        new_r[x] = head
+        dx = dur_u if x == u else dur[x]
+        qx = q_u if x == u else q[x]
+        est = max(est, head + qx)
+        prev_finish = head + dx
+    # ops past the window keep old tails; account the window exit edge
+    if w_hi < len(new_seq):
+        x = new_seq[w_hi]
+        est = max(est, prev_finish + q[x])
+    return est
+
+
+# --------------------------------------------------------------------------- #
+# main loop                                                                    #
+# --------------------------------------------------------------------------- #
+def tabu_search(
+    inst: Instance,
+    init: Solution,
+    params: TSParams | None = None,
+) -> TSResult:
+    params = params or TSParams()
+    rng = np.random.default_rng(params.seed)
+    t0 = time.monotonic()
+
+    cur = memory_update(inst, init, refresh_every=params.mem_refresh_every)
+    sched = exact_schedule(inst, cur)
+    assert sched is not None, "initial solution must be acyclic"
+    best = cur.copy()
+    best_mk = sched.makespan
+    init_mk = best_mk
+    history: list[tuple[int, float]] = [(0, best_mk)]
+
+    # tabu table: destroyed configuration (task, machine, machine-pred) → expiry iter
+    tabu: dict[tuple[int, int, int], int] = {}
+    n_procs, n_tasks = inst.n_procs, inst.n_tasks
+    it = 0
+    unimproved = 0
+    n_exact = n_approx = 0
+    accepted = 0
+
+    while unimproved < params.max_unimproved:
+        if time.monotonic() - t0 > params.time_limit:
+            break
+        it += 1
+        r, q, _, crit = heads_tails(inst, cur, sched)
+        dur = sched.finish - sched.start
+
+        moves = _n7_moves(cur, crit)
+        moves += _cc_moves(inst, cur, crit, r, sched.start, params.n_change_core_positions)
+        if not moves:
+            break
+
+        mach, _ = cur.positions(n_tasks)
+
+        def resulting_config(m: Move) -> tuple[int, int, int]:
+            dst = cur.proc_seq[m.dst_proc]
+            if m.kind == "n7":
+                tmp = [t for t in dst if t != m.task]
+                pred = tmp[m.dst_pos - 1] if m.dst_pos > 0 else -2
+            else:
+                pred = dst[m.dst_pos - 1] if m.dst_pos > 0 else -2
+            return (m.task, m.dst_proc, pred)
+
+        scored = []
+        for m in moves:
+            est = _approx_eval(inst, cur, m, r, q, dur, sched.makespan)
+            n_approx += 1
+            if np.isfinite(est):
+                scored.append((est, m))
+        scored.sort(key=lambda t: t[0])
+
+        chosen = None
+        chosen_sched = None
+        chosen_mk = np.inf
+        examined = 0
+        for est, m in scored:
+            if examined >= params.top_k and chosen is not None:
+                break
+            cfg = resulting_config(m)
+            is_tabu = tabu.get(cfg, -1) >= it
+            if is_tabu and est >= best_mk:
+                continue
+            cand = cur.copy()
+            apply_move(cand, m)
+            s = exact_schedule(inst, cand)
+            n_exact += 1
+            examined += 1
+            if s is None:
+                continue
+            if is_tabu and s.makespan >= best_mk:
+                continue  # aspiration failed
+            if s.makespan < chosen_mk:
+                chosen, chosen_sched, chosen_mk = (m, cand), s, s.makespan
+
+        if chosen is None:
+            # all admissible moves tabu/cyclic → random perturbation (line 11)
+            for _ in range(params.perturbation_size):
+                crit_ids = np.nonzero(crit)[0]
+                u = int(rng.choice(crit_ids)) if len(crit_ids) else int(rng.integers(n_tasks))
+                procs = inst.compatible_procs(u)
+                b = int(rng.choice(procs))
+                mch, pos = cur.positions(n_tasks)
+                mv = Move(
+                    "cc" if b != mch[u] else "n7",
+                    u,
+                    int(mch[u]),
+                    int(pos[u]),
+                    b,
+                    int(rng.integers(0, len(cur.proc_seq[b]) + (0 if b != mch[u] else 0) or 1))
+                    if len(cur.proc_seq[b])
+                    else 0,
+                )
+                cand = cur.copy()
+                try:
+                    apply_move(cand, mv)
+                except AssertionError:
+                    continue
+                s = exact_schedule(inst, cand)
+                if s is not None:
+                    cur, sched = cand, s
+            unimproved += 1
+            continue
+
+        m, cand = chosen
+        # tabu the configuration we are destroying (so we don't undo the move)
+        mpred_before, _ = cur.machine_pred_succ(n_tasks)
+        destroyed = (m.task, m.src_proc, int(mpred_before[m.task]) if mpred_before[m.task] >= 0 else -2)
+        if m.kind == "cc":
+            tenure = n_procs + int(rng.integers(0, 2 * n_procs))       # θ1
+        else:
+            tenure = n_tasks + int(rng.integers(0, max(1, n_tasks)))   # θ2
+        tabu[destroyed] = it + tenure
+
+        cur = cand
+        accepted += 1
+        if accepted % params.mem_update_period == 0:
+            cur = memory_update(inst, cur, refresh_every=params.mem_refresh_every)
+        sched = exact_schedule(inst, cur)
+        assert sched is not None
+
+        if sched.makespan < best_mk - 1e-9:
+            best = cur.copy()
+            best_mk = sched.makespan
+            history.append((it, best_mk))
+            unimproved = 0
+        else:
+            unimproved += 1
+
+    return TSResult(
+        best=best,
+        best_makespan=best_mk,
+        initial_makespan=init_mk,
+        iterations=it,
+        elapsed=time.monotonic() - t0,
+        history=history,
+        n_exact_evals=n_exact,
+        n_approx_evals=n_approx,
+    )

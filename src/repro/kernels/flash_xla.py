@@ -1,0 +1,127 @@
+"""XLA-level flash attention with a custom VJP (the dry-run/CPU counterpart
+of the Pallas kernel — GSPMD-partitionable jnp einsums).
+
+Forward: q-chunked online attention, saving only (q, k, v, out, lse).
+Backward: recomputes the score matrix chunk-by-chunk (flash backward), so
+the peak transient is O(chunk × Skv) instead of O(Sq × Skv) — without this,
+autodiff of long-sequence attention keeps every chunk's softmax weights
+alive simultaneously (observed: +500 GB temp on llama3-405b train_4k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_xla"]
+
+_NEG = -1e30
+
+
+def _mask(cq, skv, offset, causal, window):
+    q_pos = offset + jnp.arange(cq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    m = jnp.ones((cq, skv), bool)
+    if causal:
+        m = m & (k_pos <= q_pos)
+    if window is not None:
+        m = m & (k_pos > q_pos - window)
+    return m
+
+
+def _fwd_chunk(q_blk, k, v, offset, causal, window, scale):
+    """One q chunk vs full KV -> (out, lse). q_blk: (B,cq,H,D)."""
+    b, cq, h, d = q_blk.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    qg = (q_blk.astype(jnp.float32) * scale).reshape(b, cq, kvh, g, d)
+    s = jnp.einsum("bqcgd,bkcd->bcgqk", qg, k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    m = _mask(cq, skv, offset, causal, window)
+    s = jnp.where(m[None, None, None], s, _NEG)
+    lse = jax.scipy.special.logsumexp(s, axis=-1)                  # (B,KVH,G,cq)
+    p = jnp.exp(s - lse[..., None])
+    o = jnp.einsum("bcgqk,bkcd->bqcgd", p, v.astype(jnp.float32))
+    return (o.reshape(b, cq, h, d).astype(q_blk.dtype),
+            lse.transpose(0, 3, 1, 2).reshape(b, cq, h))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_xla(q, k, v, causal=True, window=None, q_offset=0,
+                        scale=None, chunk=256):
+    out, _ = _flash_fwd(q, k, v, causal, window, q_offset, scale, chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, scale, chunk):
+    b, sq, h, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    if sq % chunk or sq <= chunk:
+        out, lse = _fwd_chunk(q, k, v, q_offset, causal, window, scale)
+        return out, (q, k, v, out, lse)
+    nc = sq // chunk
+    qc = q.reshape(b, nc, chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    def one(args):
+        i, q_blk = args
+        return _fwd_chunk(q_blk, k, v, q_offset + i * chunk, causal, window, scale)
+
+    oc, lc = jax.lax.map(one, (jnp.arange(nc), qc))
+    out = oc.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+    lse = lc.transpose(1, 0, 2, 3).reshape(b, sq, h)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_offset, scale, chunk, res, d_out):
+    q, k, v, out, lse = res
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    scale_v = scale if scale is not None else d ** -0.5
+
+    delta = jnp.sum(d_out.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)  # (B,Sq,H)
+
+    nc = max(1, sq // chunk) if sq % chunk == 0 else 1
+    cq = sq // nc
+
+    def reshape_c(x, feat):
+        return x.reshape(b, nc, cq, *feat).transpose(1, 0, 2, *range(3, 3 + len(feat)))
+
+    qc = reshape_c(q, (h, d))
+    doc = reshape_c(d_out, (h, d))
+    lsec = reshape_c(lse, (h,))
+    delc = reshape_c(delta, (h,))
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def step(carry, args):
+        dk_acc, dv_acc = carry
+        i, q_blk, do_blk, lse_blk, del_blk = args
+        offset = q_offset + i * cq
+        qg = (q_blk.astype(jnp.float32) * scale_v).reshape(b, cq, kvh, g, d)
+        s = jnp.einsum("bqcgd,bkcd->bcgqk", qg, kf, preferred_element_type=jnp.float32)
+        m = _mask(cq, skv, offset, causal, window)
+        s = jnp.where(m[None, None, None], s, _NEG)
+        lse_g = lse_blk.reshape(b, cq, kvh, g).transpose(0, 2, 3, 1)      # (B,KVH,G,cq)
+        p = jnp.exp(s - lse_g[..., None])                                  # (B,KVH,G,cq,Skv)
+        do_g = do_blk.astype(jnp.float32).reshape(b, cq, kvh, g, d)
+        dv = jnp.einsum("bcgqk,bqcgd->bkcd", p, do_g)
+        dp = jnp.einsum("bqcgd,bkcd->bcgqk", do_g, vf)
+        del_g = del_blk.reshape(b, cq, kvh, g).transpose(0, 2, 3, 1)
+        ds = p * (dp - del_g[..., None])
+        dq = scale_v * jnp.einsum("bcgqk,bkcd->bqcgd", ds, kf).reshape(b, cq, h, d)
+        dk = scale_v * jnp.einsum("bcgqk,bqcgd->bkcd", ds, qg / scale_v)
+        return (dk_acc + dk, dv_acc + dv), dq
+
+    dk0 = jnp.zeros((b, skv, kvh, d), jnp.float32)
+    dv0 = jnp.zeros((b, skv, kvh, d), jnp.float32)
+    (dk, dv), dqc = jax.lax.scan(
+        step, (dk0, dv0), (jnp.arange(nc), qc, doc, lsec, delc)
+    )
+    dq = dqc.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_xla.defvjp(_flash_fwd, _flash_bwd)

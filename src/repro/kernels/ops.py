@@ -1,0 +1,139 @@
+"""Public kernel entry points (the ``ops.py`` contract).
+
+Each op dispatches between the Pallas TPU kernel and the pure-jnp oracle:
+
+  * on TPU — the Pallas kernel (BlockSpec-tiled, VMEM-resident);
+  * on CPU — the oracle by default, or the Pallas kernel in ``interpret=True``
+    mode when ``REPRO_PALLAS_INTERPRET=1`` (used by the kernel test suite);
+  * ``impl=`` overrides for benchmarking either path explicitly.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+__all__ = ["flash_attention", "rglru_scan", "ssd_chunked", "default_impl"]
+
+
+def default_impl() -> str:
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return "pallas_interpret"
+    platform = jax.devices()[0].platform
+    return "pallas" if platform == "tpu" else "reference"
+
+
+# --------------------------------------------------------------------------- #
+@partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "q_offset", "scale", "impl", "block_q", "block_kv", "return_lse",
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    bias: jax.Array | None = None,
+    scale: float | None = None,
+    impl: str | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    return_lse: bool = False,
+):
+    """Blockwise online-softmax attention (GQA + causal + sliding window).
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KVH, D).  Returns (B, Sq, H, D)
+    [+ LSE (B, Sq, H) when return_lse].
+    """
+    impl = impl or default_impl()
+    if impl == "reference" or bias is not None:
+        # bias path stays on the oracle (none of the assigned archs needs a
+        # learned bias inside the kernel; Whisper/Qwen biases live in projections)
+        if bias is None and not return_lse and q.shape[1] > 1024:
+            # long sequences: q-chunked XLA flash with custom VJP — bounded
+            # score transients in BOTH fwd and bwd (flash backward)
+            from .flash_xla import flash_attention_xla
+
+            chunk = int(os.environ.get("REPRO_FLASH_CHUNK", "256"))
+            return flash_attention_xla(
+                q, k, v, causal, window, q_offset, scale, chunk
+            )
+        return ref.attention_reference(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            bias=bias, scale=scale, return_lse=return_lse,
+        )
+    from . import flash_attention as fa
+
+    return fa.flash_attention_pallas(
+        q, k, v,
+        causal=causal, window=window, q_offset=q_offset, scale=scale,
+        block_q=block_q, block_kv=block_kv,
+        interpret=(impl == "pallas_interpret"),
+        return_lse=return_lse,
+    )
+
+
+# --------------------------------------------------------------------------- #
+@partial(jax.jit, static_argnames=("impl", "block_t"))
+def rglru_scan(
+    x: jax.Array,
+    a_param: jax.Array,
+    input_gate: jax.Array,
+    a_gate: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    impl: str | None = None,
+    block_t: int = 256,
+):
+    """RG-LRU gated linear recurrence.  x/gates: (B, T, D).  -> (y, h_last)."""
+    impl = impl or default_impl()
+    if impl == "reference":
+        if x.shape[1] > 512 and x.shape[1] % 256 == 0:
+            # chunked custom-VJP core: O(T/chunk) residuals instead of O(T)
+            from .rglru_xla import rglru_xla
+
+            return rglru_xla(x, a_param, input_gate, a_gate, h0, chunk=256)
+        return ref.rglru_reference(x, a_param, input_gate, a_gate, h0)
+    from . import rglru as _rglru
+
+    return _rglru.rglru_pallas(
+        x, a_param, input_gate, a_gate, h0,
+        block_t=block_t, interpret=(impl == "pallas_interpret"),
+    )
+
+
+# --------------------------------------------------------------------------- #
+@partial(jax.jit, static_argnames=("impl", "chunk"))
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    a_log: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    d_skip: jax.Array | None = None,
+    h0: jax.Array | None = None,
+    *,
+    impl: str | None = None,
+    chunk: int = 128,
+):
+    """Mamba-2 SSD (chunked state-passing).  See ref.ssd_reference."""
+    impl = impl or default_impl()
+    if impl == "reference":
+        if x.shape[1] > chunk and x.shape[1] % chunk == 0:
+            return ref.ssd_chunked_reference(x, dt, a_log, b_mat, c_mat, d_skip, h0, chunk)
+        return ref.ssd_reference(x, dt, a_log, b_mat, c_mat, d_skip, h0)
+    from . import ssd as _ssd
+
+    return _ssd.ssd_pallas(
+        x, dt, a_log, b_mat, c_mat, d_skip, h0,
+        chunk=chunk, interpret=(impl == "pallas_interpret"),
+    )

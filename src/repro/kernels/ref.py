@@ -1,0 +1,254 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the ground truth the kernels are validated against (interpret=True
+on CPU) and the fallback compute path on non-TPU backends.  All functions are
+jit-compatible and differentiable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "attention_reference", "attention_chunked_reference",
+    "rglru_reference", "ssd_reference", "ssd_chunked_reference",
+]
+
+_NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+def attention_reference(
+    q: jax.Array,                # (B, Sq, H, D)
+    k: jax.Array,                # (B, Skv, KVH, D)
+    v: jax.Array,                # (B, Skv, KVH, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,   # sliding-window size (None = full)
+    q_offset: int = 0,           # absolute position of q[0] (sharded-q support)
+    bias: jax.Array | None = None,   # (B or 1, H or 1, Sq, Skv)
+    scale: float | None = None,
+    return_lse: bool = False,
+):
+    """Grouped-query attention oracle with causal/sliding-window masking."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # group q heads with their kv head: (B, Sq, KVH, G, D)
+    qg = qf.reshape(b, sq, kvh, g, d)
+    logits = jnp.einsum("bqcgd,bkcd->bcgqk", qg, kf, preferred_element_type=jnp.float32)
+    # logits: (B, KVH, G, Sq, Skv)
+    q_pos = q_offset + jnp.arange(sq)[:, None]           # (Sq, 1) absolute
+    k_pos = jnp.arange(skv)[None, :]                     # (1, Skv) absolute
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    if bias is not None:
+        bb = bias.shape[0]
+        bh = bias.shape[1]
+        if bh == 1:
+            logits = logits + bias.reshape(bb, 1, 1, sq, skv)
+        else:
+            logits = logits + bias.reshape(bb, kvh, g, sq, skv)
+    logits = jnp.where(mask[None, None, None], logits, _NEG_INF)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1, keepdims=True)
+    weights = jnp.exp(logits - lse)
+    out = jnp.einsum("bcgqk,bkcd->bqcgd", weights, vf, preferred_element_type=jnp.float32)
+    out = out.reshape(b, sq, h, d).astype(q.dtype)
+    if return_lse:
+        # lse: (B, KVH, G, Sq, 1) -> (B, Sq, H)
+        lse_out = lse[..., 0].transpose(0, 3, 1, 2).reshape(b, sq, h)
+        return out, lse_out
+    return out
+
+
+def attention_chunked_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+    chunk: int = 256,
+):
+    """XLA-level flash attention: q processed in chunks via lax.map so the
+    score matrix never exceeds (chunk × Skv) per step — the memory shape the
+    TPU kernel has, expressed in jnp for the CPU/dry-run path (GSPMD
+    partitions the einsums; on TPU the Pallas kernel takes over)."""
+    b, sq, h, d = q.shape
+    if sq % chunk or sq <= chunk:
+        return attention_reference(
+            q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale
+        )
+    n_chunks = sq // chunk
+    qc = q.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    def one(args):
+        i, q_blk = args
+        return _chunk_attn(q_blk, k, v, causal, window, q_offset + i * chunk, scale)
+
+    out = jax.lax.map(one, (jnp.arange(n_chunks), qc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+
+
+def _chunk_attn(q_blk, k, v, causal, window, offset, scale):
+    """One q-chunk vs full KV with a dynamic absolute offset."""
+    b, cq, h, d = q_blk.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    qg = (q_blk.astype(jnp.float32) * scale).reshape(b, cq, kvh, g, d)
+    logits = jnp.einsum("bqcgd,bkcd->bcgqk", qg, k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    q_pos = offset + jnp.arange(cq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((cq, skv), dtype=bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    logits = jnp.where(mask[None, None, None], logits, _NEG_INF)
+    weights = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bcgqk,bkcd->bqcgd", weights, v.astype(jnp.float32))
+    return out.reshape(b, cq, h, d).astype(q_blk.dtype)
+
+
+def rglru_reference(
+    x: jax.Array,            # (B, T, D) gated input
+    a_param: jax.Array,      # (D,)   recurrence "Λ" parameter (pre-softplus)
+    input_gate: jax.Array,   # (B, T, D) in (0,1)
+    a_gate: jax.Array,       # (B, T, D) in (0,1)
+    h0: jax.Array | None = None,   # (B, D) initial state
+    c: float = 8.0,
+):
+    """Griffin RG-LRU oracle (arXiv:2402.19427, eq. 4):
+
+        a_t   = exp(-c · softplus(a_param) · a_gate_t)
+        h_t   = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+    Returns (y, h_last) with y = h (sequence of states).
+    """
+    b, t, d = x.shape
+    log_a = -c * jax.nn.softplus(a_param.astype(jnp.float32)) * a_gate.astype(jnp.float32)
+    a = jnp.exp(log_a)                                    # (B, T, D)
+    gated = input_gate.astype(jnp.float32) * x.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    xb = beta * gated
+    h_init = jnp.zeros((b, d), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, xb_t = inp
+        h = a_t * h + xb_t
+        return h, h
+
+    h_last, ys = jax.lax.scan(step, h_init, (a.transpose(1, 0, 2), xb.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(x.dtype), h_last
+
+
+def ssd_reference(
+    x: jax.Array,        # (B, T, H, P)   inputs (P = head dim)
+    dt: jax.Array,       # (B, T, H)      softplus'd step sizes  (>0)
+    a_log: jax.Array,    # (H,)           log of -A  (A = -exp(a_log))
+    b_mat: jax.Array,    # (B, T, G, N)   input projections  (N = state dim)
+    c_mat: jax.Array,    # (B, T, G, N)   output projections
+    d_skip: jax.Array | None = None,   # (H,) skip connection
+    h0: jax.Array | None = None,       # (B, H, P, N)
+):
+    """Mamba-2 SSD oracle (arXiv:2405.21060) — sequential state recurrence:
+
+        h_t = exp(dt_t · A) ⊙ h_{t-1} + dt_t · x_t ⊗ B_t
+        y_t = h_t · C_t (+ D ⊙ x_t)
+
+    Grouped B/C (G groups shared across H//G heads).  Returns (y, h_last).
+    """
+    bsz, t, h, p = x.shape
+    _, _, g, n = b_mat.shape
+    assert h % g == 0
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))               # (H,)
+    dt32 = dt.astype(jnp.float32)
+    decay = jnp.exp(dt32 * a[None, None, :])              # (B, T, H)
+    bx = (
+        dt32[..., None, None]
+        * x.astype(jnp.float32)[..., :, :, None]
+        * jnp.repeat(b_mat.astype(jnp.float32), rep, axis=2)[..., :, None, :]
+    )                                                     # (B, T, H, P, N)
+    c_full = jnp.repeat(c_mat.astype(jnp.float32), rep, axis=2)  # (B, T, H, N)
+    h_init = jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(state, inp):
+        decay_t, bx_t, c_t = inp
+        state = decay_t[..., None, None] * state + bx_t
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y_t
+
+    h_last, ys = jax.lax.scan(
+        step,
+        h_init,
+        (decay.transpose(1, 0, 2), bx.transpose(1, 0, 2, 3, 4), c_full.transpose(1, 0, 2, 3)),
+    )
+    y = ys.transpose(1, 0, 2, 3)
+    if d_skip is not None:
+        y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), h_last
+
+
+def ssd_chunked_reference(
+    x: jax.Array,        # (B, T, H, P)
+    dt: jax.Array,       # (B, T, H)
+    a_log: jax.Array,    # (H,)
+    b_mat: jax.Array,    # (B, T, G, N)
+    c_mat: jax.Array,    # (B, T, G, N)
+    d_skip: jax.Array | None = None,
+    h0: jax.Array | None = None,
+    chunk: int = 128,
+):
+    """Chunked SSD in jnp — the kernel's algorithm at XLA level: intra-chunk
+    masked-decay matmul + inter-chunk state pass.  Peak intermediate is
+    O(B·H·chunk²) instead of the naive O(B·T·H·P·N)."""
+    bsz, t, h, p = x.shape
+    _, _, g, n = b_mat.shape
+    if t % chunk or t <= chunk:
+        return ssd_reference(x, dt, a_log, b_mat, c_mat, d_skip, h0)
+    rep = h // g
+    nc = t // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                          # (H,)
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h).transpose(1, 0, 2, 3)
+    bf = b_mat.astype(jnp.float32).reshape(bsz, nc, chunk, g, n).transpose(1, 0, 2, 3, 4)
+    cf = c_mat.astype(jnp.float32).reshape(bsz, nc, chunk, g, n).transpose(1, 0, 2, 3, 4)
+    h_init = jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(hc, inp):
+        xc, dtc, bc, cc = inp                     # (B,c,H,P) (B,c,H) (B,c,G,N) ×2
+        log_a = dtc * a[None, None, :]            # (B,c,H) ≤ 0
+        L = jnp.cumsum(log_a, axis=1)             # (B,c,H)
+        cb = jnp.einsum("bcgn,bsgn->bgcs", cc, bc)            # (B,G,c,c)
+        cb = jnp.repeat(cb, rep, axis=1)                       # (B,H,c,c)
+        decay = jnp.exp(L.transpose(0, 2, 1)[:, :, :, None]    # L_t
+                        - L.transpose(0, 2, 1)[:, :, None, :])  # − L_s
+        m = jnp.where(tri[None, None], cb * decay * dtc.transpose(0, 2, 1)[:, :, None, :], 0.0)
+        y = jnp.einsum("bhcs,bshp->bchp", m, xc)               # intra-chunk
+        c_scaled = jnp.repeat(cc, rep, axis=2) * jnp.exp(L)[..., None]   # (B,c,H,N)
+        y = y + jnp.einsum("bchn,bhpn->bchp", c_scaled, hc)    # inter-chunk
+        w = dtc * jnp.exp(L[:, -1:, :] - L)                    # (B,c,H)
+        bw = jnp.repeat(bc, rep, axis=2) * w[..., None]        # (B,c,H,N)
+        h_new = jnp.exp(L[:, -1])[..., None, None] * hc + jnp.einsum("bchp,bchn->bhpn", xc, bw)
+        return h_new, y
+
+    h_last, ys = jax.lax.scan(step, h_init, (xf, dtf, bf, cf))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, t, h, p)
+    if d_skip is not None:
+        y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), h_last

@@ -1,0 +1,124 @@
+"""Chunked linear scan with custom VJP — the XLA-level RG-LRU core.
+
+Autodiff of a T-step ``lax.scan`` keeps O(T) per-step residuals; for
+RecurrentGemma train_4k that is ~2.7 GB fp32 per layer × 17 recurrent layers.
+This implementation saves only *chunk-boundary* states (T/chunk × (B, D)) and
+rebuilds intra-chunk states during the backward pass (the flash-attention
+trade applied to a linear recurrence):
+
+    h_t = a_t ⊙ h_{t−1} + x_t
+    adjoint:  g_t = dy_t + a_{t+1} ⊙ g_{t+1};  dx_t = g_t;
+              da_t = g_t ⊙ h_{t−1};  dh0 = a_0 ⊙ g_0
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["linear_scan_xla", "rglru_xla"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear_scan_xla(a, x, h0, chunk=256):
+    y, _ = _scan_fwd(a, x, h0, chunk)
+    return y
+
+
+def _chunks(t, chunk):
+    return t // chunk if t % chunk == 0 and t > chunk else 1
+
+
+def _scan_fwd(a, x, h0, chunk):
+    b, t, d = x.shape
+    nc = _chunks(t, chunk)
+    ch = t // nc
+    ac = a.reshape(b, nc, ch, d).transpose(1, 0, 2, 3)
+    xc = x.reshape(b, nc, ch, d).transpose(1, 0, 2, 3)
+
+    def chunk_fwd(h, inp):
+        a_c, x_c = inp
+
+        def step(hh, sx):
+            aa, xx = sx
+            hh = aa * hh + xx
+            return hh, hh
+
+        h_out, ys = jax.lax.scan(step, h, (a_c.transpose(1, 0, 2), x_c.transpose(1, 0, 2)))
+        return h_out, (ys.transpose(1, 0, 2), h)
+
+    h_last, (yc, boundaries) = jax.lax.scan(chunk_fwd, h0, (ac, xc))
+    y = yc.transpose(1, 0, 2, 3).reshape(b, t, d)
+    return y, (a, x, h0, boundaries)   # boundaries: (nc, B, D) state BEFORE each chunk
+
+
+def _scan_bwd(chunk, res, dy):
+    a, x, h0, boundaries = res
+    b, t, d = x.shape
+    nc = boundaries.shape[0]
+    ch = t // nc
+    ac = a.reshape(b, nc, ch, d).transpose(1, 0, 2, 3)
+    xc = x.reshape(b, nc, ch, d).transpose(1, 0, 2, 3)
+    dyc = dy.reshape(b, nc, ch, d).transpose(1, 0, 2, 3)
+
+    def chunk_bwd(carry, inp):
+        inflow = carry                      # a_s * g_s of the next chunk's head
+        a_c, x_c, dy_c, h_in = inp
+
+        # rebuild intra-chunk states h_0..h_{ch-1}
+        def step(hh, sx):
+            aa, xx = sx
+            hh = aa * hh + xx
+            return hh, hh
+
+        _, hs = jax.lax.scan(step, h_in, (a_c.transpose(1, 0, 2), x_c.transpose(1, 0, 2)))
+        h_prev = jnp.concatenate([h_in[None], hs[:-1]], axis=0)  # h_{t-1} per step
+
+        # reverse adjoint within the chunk
+        def rstep(g_next_in, sx):
+            dy_t, a_t, hp_t = sx
+            g_t = dy_t + g_next_in
+            da_t = g_t * hp_t
+            dx_t = g_t
+            return a_t * g_t, (da_t, dx_t)
+
+        out_carry, (da_c, dx_c) = jax.lax.scan(
+            rstep, inflow,
+            (dy_c.transpose(1, 0, 2), a_c.transpose(1, 0, 2), h_prev),
+            reverse=True,
+        )
+        return out_carry, (da_c.transpose(1, 0, 2), dx_c.transpose(1, 0, 2))
+
+    inflow0 = jnp.zeros_like(h0)
+    dh0_flow, (dac, dxc) = jax.lax.scan(
+        chunk_bwd, inflow0, (ac, xc, dyc, boundaries), reverse=True
+    )
+    da = dac.transpose(1, 0, 2, 3).reshape(b, t, d)
+    dx = dxc.transpose(1, 0, 2, 3).reshape(b, t, d)
+    return da, dx, dh0_flow
+
+
+linear_scan_xla.defvjp(_scan_fwd, _scan_bwd)
+
+
+def rglru_xla(
+    x: jax.Array,
+    a_param: jax.Array,
+    input_gate: jax.Array,
+    a_gate: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    c: float = 8.0,
+    chunk: int = 256,
+):
+    """RG-LRU with the chunked custom-VJP core; gate math stays in XLA
+    (elementwise, recomputed under the layer checkpoint)."""
+    b, t, d = x.shape
+    log_a = -c * jax.nn.softplus(a_param.astype(jnp.float32)) * a_gate.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    xb = beta * input_gate.astype(jnp.float32) * x.astype(jnp.float32)
+    h_init = jnp.zeros((b, d), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    y = linear_scan_xla(a, xb, h_init, chunk)
+    return y.astype(x.dtype), y[:, -1, :].astype(jnp.float32)

@@ -1,0 +1,131 @@
+"""Mamba-2 SSD (state-space duality) — chunked Pallas TPU kernel.
+
+The SSD insight: within a chunk the recurrence is a *dense* (chunk × chunk)
+masked-decay matmul (MXU work), and only the chunk boundary passes a
+(P × N) state — the sequential part shrinks by a factor of `chunk`:
+
+    L_t   = cumsum(log a_t)                 (chunk,)       a_t = exp(dt_t·A_h)
+    M[t,s]= exp(L_t − L_s)·1[t≥s]·(C_t·B_s)·dt_s           (chunk × chunk)
+    Y     = M @ X  +  (C ⊙ exp(L)) @ h_prevᵀ               (chunk × P)
+    h'    = exp(L_last)·h_prev + Xᵀ @ (B ⊙ dt·exp(L_last−L))   (P × N)
+
+Tiling: grid = (batch, head, T / chunk), time sequential; the fp32 state
+(P, N) persists in VMEM scratch.  All exp() arguments are ≤ 0, so the chunked
+form is numerically safe.  Grouped B/C (G < H) is handled by the index_map
+(head h reads group h // (H/G)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_pallas"]
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, h0_ref, y_ref, hlast_ref,
+            h_ref, *, chunk, n_chunks):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))            # scalar A_h < 0
+    dt = dt_ref[0, 0, :].astype(jnp.float32)                 # (chunk,)
+    log_a = dt * a                                           # (chunk,) ≤ 0
+    L = jnp.cumsum(log_a)                                    # (chunk,)
+    x = x_ref[0, 0].astype(jnp.float32)                      # (chunk, P)
+    bm = b_ref[0, 0].astype(jnp.float32)                     # (chunk, N)
+    cm = c_ref[0, 0].astype(jnp.float32)                     # (chunk, N)
+
+    # intra-chunk: M[t,s] = exp(L_t - L_s) * (t>=s) * (C_t·B_s) * dt_s
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (chunk, chunk)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(L[:, None] - L[None, :])
+    m = jnp.where(t_idx >= s_idx, cb * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(m, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (chunk, P)
+
+    # inter-chunk: contribution of the carried state
+    h = h_ref[...]                                            # (P, N)
+    c_scaled = cm * jnp.exp(L)[:, None]                       # (chunk, N)
+    y = y + jax.lax.dot_general(c_scaled, h, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update
+    w = dt * jnp.exp(L[-1] - L)                               # (chunk,)
+    bw = bm * w[:, None]                                      # (chunk, N)
+    h_new = jnp.exp(L[-1]) * h + jax.lax.dot_general(
+        x, bw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                         # (P, N)
+    h_ref[...] = h_new
+
+    @pl.when(ic == n_chunks - 1)
+    def _final():
+        hlast_ref[0, 0] = h_new
+
+
+def ssd_pallas(
+    x: jax.Array,        # (B, T, H, P)
+    dt: jax.Array,       # (B, T, H)
+    a_log: jax.Array,    # (H,)
+    b_mat: jax.Array,    # (B, T, G, N)
+    c_mat: jax.Array,    # (B, T, G, N)
+    d_skip: jax.Array | None = None,
+    h0: jax.Array | None = None,
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    bsz, t, h, p = x.shape
+    _, _, g, n = b_mat.shape
+    chunk = min(chunk, t)
+    if t % chunk:
+        from . import ref
+
+        return ref.ssd_reference(x, dt, a_log, b_mat, c_mat, d_skip, h0)
+    rep = h // g
+
+    xt = x.transpose(0, 2, 1, 3)                # (B, H, T, P)
+    dtt = dt.transpose(0, 2, 1)                 # (B, H, T)
+    bt = b_mat.transpose(0, 2, 1, 3)            # (B, G, T, N)
+    ct = c_mat.transpose(0, 2, 1, 3)
+    h_init = (jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    n_chunks = t // chunk
+    grid = (bsz, h, n_chunks)
+    y, h_last = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bb, hh, cc: (bb, hh, cc, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bb, hh, cc: (bb, hh, cc)),
+            pl.BlockSpec((1,), lambda bb, hh, cc: (hh,)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bb, hh, cc, r=rep: (bb, hh // r, cc, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bb, hh, cc, r=rep: (bb, hh // r, cc, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bb, hh, cc: (bb, hh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bb, hh, cc: (bb, hh, cc, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bb, hh, cc: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, t, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, a_log, bt, ct, h_init)
+
+    y = y.transpose(0, 2, 1, 3)                 # (B, T, H, P)
+    if d_skip is not None:
+        y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), h_last

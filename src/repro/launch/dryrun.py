@@ -1,0 +1,296 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: the dry-run builds the production meshes
+#   (16×16 single pod, 2×16×16 multi-pod) out of 512 host placeholder devices.
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell against the production meshes, record memory/cost/collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b --cell train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only] [--force]
+
+Results are cached as JSON under results/dryrun/ so the roofline pass and
+EXPERIMENTS.md read from artifacts, not reruns.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPE_CELLS
+from ..configs.registry import ARCH_IDS, get_config
+from ..models.common import ParamDef
+from ..runtime.optimizer import adafactor, adamw
+from ..runtime.train import TrainState, make_prefill_step, make_serve_step, make_train_step
+from ..sharding import set_mesh
+from .mesh import make_production_mesh
+from .specs import CELLS, arch_rules, cache_specs, input_specs, train_state_specs
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+# long_500k requires sub-quadratic decode state (see DESIGN.md §5)
+LONG_OK = {"recurrentgemma-2b", "mamba2-780m", "mixtral-8x7b"}
+# memory-constrained flagship uses factored optimizer states
+OPTIMIZER_OF = {"llama3-405b": "adafactor"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Bytes of the first shape literal in an HLO result, e.g. 'bf16[8,128]'."""
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind + estimate wire bytes/device.
+
+    Wire estimates (ring algorithms, group size n):
+      all-gather: out×(n−1)/n     reduce-scatter: in×(n−1)/n = out×(n−1)
+      all-reduce: 2×size×(n−1)/n  all-to-all: size×(n−1)/n   permute: size
+    """
+    per_kind: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    wire: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) (all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", ls)
+        if not m:
+            continue
+        shape_txt, kind = m.groups()
+        nbytes = sum(_shape_bytes(s) for s in re.findall(r"[a-z0-9]+\[[0-9,]*\]", shape_txt)) \
+            or _shape_bytes(shape_txt)
+        g = re.search(r"replica_groups=\{\{([0-9, ]+)\}", ls)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", ls)
+            n = int(g2.group(2)) if g2 else 2
+        n = max(2, n)
+        per_kind[kind] += nbytes
+        counts[kind] += 1
+        if kind == "all-gather":
+            wire[kind] += nbytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire[kind] += nbytes * (n - 1)
+        elif kind == "all-reduce":
+            wire[kind] += 2 * nbytes * (n - 1) / n
+        elif kind == "all-to-all":
+            wire[kind] += nbytes * (n - 1) / n
+        else:
+            wire[kind] += nbytes
+    return {
+        "result_bytes": per_kind,
+        "wire_bytes": wire,
+        "counts": counts,
+        "total_wire_bytes": float(sum(wire.values())),
+    }
+
+
+def _mem_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        keys = (
+            "argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes",
+            "generated_code_size_in_bytes", "alias_size_in_bytes",
+        )
+        out = {}
+        for k in keys:
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+        out["repr"] = str(ma)
+        return out
+    except Exception as e:  # pragma: no cover
+        return {"error": f"{type(e).__name__}: {e}"}
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        return {"error": f"{type(e).__name__}: {e}"}
+
+
+def lower_cell(arch: str, cell_name: str, *, multi_pod: bool, scan_group: int | None = None,
+               save_names: tuple[str, ...] | None = None, extra_tag: str = "",
+               cfg_override=None, optimizer: str | None = None, moe_ep: bool = False,
+               param_dtype=None, carry_seq_tp: bool = False):
+    """Lower one (arch × cell × mesh) and return (lowered, meta)."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    cell = CELLS[cell_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = arch_rules(cfg, cell, mesh, moe_ep=moe_ep, carry_seq_tp=carry_seq_tp)
+    set_mesh(mesh)
+
+    opt_name = optimizer or OPTIMIZER_OF.get(arch, "adamw")
+    if save_names is None:
+        # default residency: keep layer inputs only (pure grouped remat) for
+        # the big dense archs; the planner refines this per arch in §Perf
+        save_names = ()
+    policy = None
+    if save_names:
+        policy = jax.checkpoint_policies.save_only_these_names(*save_names)
+
+    with mesh:
+        if cell.kind == "train":
+            state_sds, state_sh = train_state_specs(cfg, mesh, rules, optimizer=opt_name)
+            batch_sds = input_specs(cfg, cell, mesh, rules)
+            master = opt_name.endswith("_master")
+            base = opt_name.removesuffix("_master")
+            if base == "adafactor":
+                opt = adafactor(master_fp32=master)
+            else:
+                opt = adamw(master_fp32=master)
+            step_fn = make_train_step(cfg, opt, rules=rules, scan_group=scan_group,
+                                      remat_policy=policy)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_sds, batch_sds)
+        elif cell.kind == "prefill":
+            from .specs import param_specs
+
+            _, p_sds, p_sh = param_specs(cfg, mesh, rules, param_dtype=param_dtype)
+            batch_sds = input_specs(cfg, cell, mesh, rules)
+            step_fn = make_prefill_step(cfg, rules=rules, max_len=cell.seq_len)
+            lowered = jax.jit(step_fn, in_shardings=(p_sh, None)).lower(p_sds, batch_sds)
+        else:  # decode
+            from .specs import param_specs
+
+            _, p_sds, p_sh = param_specs(cfg, mesh, rules, param_dtype=param_dtype)
+            c_sds, c_sh = cache_specs(cfg, cell, mesh, rules)
+            batch_sds = input_specs(cfg, cell, mesh, rules)
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32,
+                                           sharding=NamedSharding(mesh, P()))
+            key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                                           sharding=NamedSharding(mesh, P()))
+            step_fn = make_serve_step(cfg, rules=rules)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, c_sh, None, None, None),
+                donate_argnums=(1,),
+            ).lower(p_sds, c_sds, batch_sds["tokens"], pos_sds, key_sds)
+    meta = {
+        "arch": arch, "cell": cell_name, "multi_pod": multi_pod,
+        "mesh": dict(mesh.shape), "optimizer": opt_name,
+        "scan_group": scan_group, "save_names": list(save_names), "tag": extra_tag,
+    }
+    return lowered, meta, mesh
+
+
+def run_cell(arch: str, cell_name: str, *, multi_pod: bool, out_dir: str = RESULTS_DIR,
+             force: bool = False, scan_group: int | None = None,
+             save_names: tuple[str, ...] | None = None, tag: str = "",
+             **lower_kw) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    mp = "2pod" if multi_pod else "1pod"
+    fname = os.path.join(out_dir, f"{arch}__{cell_name}__{mp}{('__' + tag) if tag else ''}.json")
+    if os.path.exists(fname) and not force:
+        with open(fname) as f:
+            return json.load(f)
+
+    cell = CELLS[cell_name]
+    record: dict = {"arch": arch, "cell": cell_name, "mesh": mp, "tag": tag}
+    if cell_name == "long_500k" and arch not in LONG_OK:
+        record["status"] = "skipped"
+        record["reason"] = "pure full-attention arch: 500k decode state is quadratic (DESIGN.md §5)"
+        with open(fname, "w") as f:
+            json.dump(record, f, indent=1)
+        return record
+
+    t0 = time.time()
+    try:
+        lowered, meta, mesh = lower_cell(
+            arch, cell_name, multi_pod=multi_pod,
+            scan_group=scan_group, save_names=save_names, extra_tag=tag, **lower_kw,
+        )
+        record.update(meta)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        record["status"] = "ok"
+        record["time_lower_s"] = round(t_lower, 2)
+        record["time_compile_s"] = round(t_compile, 2)
+        record["memory_analysis"] = _mem_analysis(compiled)
+        record["cost_analysis"] = _cost_analysis(compiled)
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        record["collectives"] = parse_collectives(hlo)
+        record["n_devices"] = mesh.size
+        print(compiled.memory_analysis())
+        ca = record["cost_analysis"]
+        print(f"[{arch} × {cell_name} × {mp}] OK  lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"flops={ca.get('flops', 0):.3e} bytes={ca.get('bytes accessed', 0):.3e} "
+              f"wire={record['collectives']['total_wire_bytes']:.3e}")
+    except Exception as e:
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{arch} × {cell_name} × {mp}] FAIL {type(e).__name__}: {e}")
+    with open(fname, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--cell", choices=[c.name for c in SHAPE_CELLS])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true", help="2×16×16 mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--scan-group", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    jobs = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for cell in SHAPE_CELLS:
+                for mp in meshes:
+                    jobs.append((arch, cell.name, mp))
+    else:
+        assert args.arch and args.cell, "--arch/--cell or --all"
+        jobs = [(args.arch, args.cell, mp) for mp in meshes]
+
+    n_ok = n_fail = n_skip = 0
+    for arch, cell, mp in jobs:
+        rec = run_cell(arch, cell, multi_pod=mp, force=args.force,
+                       scan_group=args.scan_group, tag=args.tag)
+        s = rec.get("status")
+        n_ok += s == "ok"
+        n_fail += s == "error"
+        n_skip += s == "skipped"
+    print(f"dry-run summary: {n_ok} ok, {n_skip} skipped (documented), {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh factories.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): 16×16 (data, model) single pod, 2×16×16 (pod, data, model)
+across two pods.  The dry-run forces 512 host platform devices *before any
+jax import* (see dryrun.py lines 1–2); everything else sees the real
+topology.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests / elastic re-mesh)."""
+    return jax.make_mesh(shape, axes)

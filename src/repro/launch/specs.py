@@ -1,0 +1,203 @@
+"""Abstract input/state/cache specs for lowering (ShapeDtypeStruct + sharding).
+
+No allocation happens here: every array the dry-run lowers against is a
+ShapeDtypeStruct carrying a NamedSharding, so ``jit(...).lower().compile()``
+exercises the full production partitioning without touching device memory.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, SHAPE_CELLS, ShapeCell
+from ..models import arch_cache_defs, arch_model_defs
+from ..models.common import ParamDef, spec_tree
+from ..runtime.optimizer import adafactor_factored
+from ..sharding import ShardingRules, make_rules
+
+__all__ = [
+    "CELLS", "batch_axes_for", "arch_rules", "input_specs",
+    "param_specs", "train_state_specs", "cache_specs", "sds",
+]
+
+CELLS: dict[str, ShapeCell] = {c.name: c for c in SHAPE_CELLS}
+
+
+def sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_axes_for(global_batch: int, mesh) -> tuple[str, ...]:
+    """Largest prefix of (pod, data) whose product divides the batch."""
+    chosen: list[str] = []
+    prod = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and global_batch % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    return tuple(chosen)
+
+
+def arch_rules(cfg: ModelConfig, cell: ShapeCell, mesh, *, moe_ep: bool = False,
+               carry_seq_tp: bool = False) -> ShardingRules:
+    """Per-(arch, cell) partitioning decisions:
+
+    * heads-TP when n_heads divides the model axis;
+    * q-sequence TP (context parallel) for indivisible-head attention archs
+      on train/prefill (decode shards the KV cache over `model` instead);
+    * recurrent archs never shard seq (the scan is sequential in time);
+    * batch axes shrink when the cell's global batch cannot be split.
+    """
+    model_size = mesh.shape["model"]
+    multi = "pod" in mesh.axis_names
+    has_attn = cfg.n_heads > 0
+    shard_heads = has_attn and cfg.n_heads % model_size == 0
+    recurrent = any(k in ("rec", "ssm") for k in cfg.kinds)
+    qseq = (
+        has_attn and not shard_heads and not recurrent
+        and cell.kind in ("train", "prefill")
+        and cell.seq_len % model_size == 0
+    )
+    if moe_ep and (not cfg.n_experts or cfg.n_experts % model_size != 0):
+        raise ValueError(f"moe_ep needs n_experts % {model_size} == 0")
+    return make_rules(
+        multi_pod=multi,
+        shard_heads=shard_heads,
+        qseq_tp=qseq,
+        fsdp=True,
+        batch_axes=batch_axes_for(cell.global_batch, mesh),
+        moe_ep=moe_ep,
+        carry_seq_tp=carry_seq_tp and cell.seq_len % model_size == 0,
+    )
+
+
+def _b(rules: ShardingRules):
+    return rules.acts.get("batch")
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh, rules: ShardingRules) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b_ax = _b(rules)
+    seq_ax = rules.acts.get("seq")
+    gb, s = cell.global_batch, cell.seq_len
+    emb_dt = jnp.dtype(cfg.dtype)
+    if cell.kind == "decode":
+        batch = {"tokens": sds((gb, 1), jnp.int32, mesh, P(b_ax, None))}
+    else:
+        batch = {"tokens": sds((gb, s), jnp.int32, mesh, P(b_ax, seq_ax))}
+        if cell.kind == "train":
+            batch["labels"] = sds((gb, s), jnp.int32, mesh, P(b_ax, seq_ax))
+    if cfg.encoder_layers and cell.kind != "decode":
+        batch["frames"] = sds((gb, cfg.n_frames, cfg.d_model), emb_dt, mesh, P(b_ax, None, None))
+    if cfg.n_vis_tokens and cell.kind == "train":
+        batch["vis_embeds"] = sds(
+            (gb, cfg.n_vis_tokens, cfg.d_model), emb_dt, mesh, P(b_ax, None, None)
+        )
+    return batch
+
+
+def param_specs(cfg: ModelConfig, mesh, rules: ShardingRules, *, max_dec_positions: int = 32_768,
+                param_dtype=None):
+    defs = arch_model_defs(cfg, max_dec_positions=max_dec_positions)
+    if param_dtype is not None:
+        defs = jax.tree.map(
+            lambda d: ParamDef(d.shape, d.axes, d.init, d.scale, jnp.dtype(param_dtype)),
+            defs, is_leaf=lambda x: isinstance(x, ParamDef),
+        )
+    specs = spec_tree(defs, rules.params)
+    sds_tree = jax.tree.map(
+        lambda d, sp: sds(d.shape, d.dtype, mesh, sp),
+        defs, specs, is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+    shardings = jax.tree.map(
+        lambda d, sp: NamedSharding(mesh, sp),
+        defs, specs, is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+    return defs, sds_tree, shardings
+
+
+def _drop_axis(spec: P, ndim: int, axis: int) -> P:
+    """Drop one dim from a spec, honoring implicit trailing-None padding."""
+    parts = list(spec) + [None] * (ndim - len(spec))
+    del parts[axis]
+    return P(*parts)
+
+
+def train_state_specs(
+    cfg: ModelConfig,
+    mesh,
+    rules: ShardingRules,
+    *,
+    optimizer: str = "adamw",
+    compression: bool = False,
+    state_dtype=jnp.float32,
+):
+    """(TrainState SDS tree, TrainState sharding tree) for lowering."""
+    from ..runtime.train import TrainState
+
+    master = optimizer.endswith("_master")
+    opt_base = optimizer.removesuffix("_master")
+    param_dtype = jnp.bfloat16 if master else None
+    defs, p_sds, p_shard = param_specs(cfg, mesh, rules, param_dtype=param_dtype)
+    specs = spec_tree(defs, rules.params)
+    is_def = lambda x: isinstance(x, ParamDef)
+    is_pair = lambda x: isinstance(x, tuple)
+
+    def like(d: ParamDef, sp: P, dtype):
+        return sds(d.shape, dtype, mesh, sp), NamedSharding(mesh, sp)
+
+    def fp32_tree():
+        pr = jax.tree.map(lambda d, sp: like(d, sp, jnp.float32), defs, specs, is_leaf=is_def)
+        return (jax.tree.map(lambda p: p[0], pr, is_leaf=is_pair),
+                jax.tree.map(lambda p: p[1], pr, is_leaf=is_pair))
+
+    if opt_base.startswith("adamw"):
+        dt = jnp.bfloat16 if opt_base == "adamw_bf16" else state_dtype
+        pairs = jax.tree.map(lambda d, sp: like(d, sp, dt), defs, specs, is_leaf=is_def)
+        m_sds = jax.tree.map(lambda pr: pr[0], pairs, is_leaf=is_pair)
+        m_sh = jax.tree.map(lambda pr: pr[1], pairs, is_leaf=is_pair)
+        opt_sds = {"m": m_sds, "v": m_sds}
+        opt_sh = {"m": m_sh, "v": m_sh}
+        if master:
+            opt_sds["master"], opt_sh["master"] = fp32_tree()
+        if compression:
+            opt_sds["residual"], opt_sh["residual"] = fp32_tree()
+    elif opt_base == "adafactor":
+        def slot(d: ParamDef, sp: P):
+            if adafactor_factored(d.shape):
+                sp_r = _drop_axis(sp, len(d.shape), -1)
+                sp_c = _drop_axis(sp, len(d.shape), -2)
+                return (
+                    {"vr": sds(d.shape[:-1], jnp.float32, mesh, sp_r),
+                     "vc": sds(d.shape[:-2] + d.shape[-1:], jnp.float32, mesh, sp_c)},
+                    {"vr": NamedSharding(mesh, sp_r), "vc": NamedSharding(mesh, sp_c)},
+                )
+            return (
+                {"v": sds(d.shape, jnp.float32, mesh, sp)},
+                {"v": NamedSharding(mesh, sp)},
+            )
+
+        pairs = jax.tree.map(slot, defs, specs, is_leaf=is_def)
+        opt_sds = {"slots": jax.tree.map(lambda pr: pr[0], pairs, is_leaf=is_pair)}
+        opt_sh = {"slots": jax.tree.map(lambda pr: pr[1], pairs, is_leaf=is_pair)}
+        if master:
+            opt_sds["master"], opt_sh["master"] = fp32_tree()
+    else:
+        raise ValueError(optimizer)
+
+    step_sds = sds((), jnp.int32, mesh, P())
+    state_sds = TrainState(params=p_sds, opt_state=opt_sds, step=step_sds)
+    state_sh = TrainState(params=p_shard, opt_state=opt_sh, step=NamedSharding(mesh, P()))
+    return state_sds, state_sh
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell, mesh, rules: ShardingRules):
+    defs = arch_cache_defs(cfg, cell.global_batch, cell.seq_len)
+    specs = spec_tree(defs, rules.acts)
+    is_def = lambda x: isinstance(x, ParamDef)
+    c_sds = jax.tree.map(lambda d, sp: sds(d.shape, d.dtype, mesh, sp), defs, specs, is_leaf=is_def)
+    c_sh = jax.tree.map(lambda d, sp: NamedSharding(mesh, sp), defs, specs, is_leaf=is_def)
+    return c_sds, c_sh

@@ -1,0 +1,97 @@
+"""Production training driver.
+
+Assembles: config → HDATS planner (residency + scan group) → mesh + sharding
+rules → jit(train_step) with planner remat policy → step loop with async
+checkpointing, failure recovery, and deterministic data replay.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --smoke \
+        --steps 100 --batch 16 --seq 128 --ckpt-dir /tmp/ckpt
+
+Full-scale configs lower the same code path on the production meshes (see
+dryrun.py); on this CPU container use --smoke (reduced config, 1 device).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ShapeCell
+from ..configs.registry import ARCH_IDS, get_config, get_smoke_config
+from ..models import arch_init_params
+from ..plan import plan_residency
+from ..runtime import SyntheticLM, TrainState, adafactor, adamw, make_train_step
+from ..runtime.elastic import run_with_recovery
+
+__all__ = ["train_main"]
+
+
+def train_main(argv=None) -> TrainState:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-14b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--optimizer", choices=("adamw", "adafactor"), default="adamw")
+    ap.add_argument("--planner", choices=("tabu", "greedy", "none"), default="greedy")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+
+    # ---- the paper's planner chooses the residency plan -------------------
+    remat_policy = None
+    scan_group = None
+    if args.planner != "none":
+        full = get_config(args.arch)
+        cell = ShapeCell("train_cfg", args.seq, args.batch, "train")
+        plan = plan_residency(full, cell, use_tabu=(args.planner == "tabu"),
+                              optimizer=args.optimizer)
+        print(f"[plan] g={plan.scan_group} save={plan.save_names} "
+              f"offload={plan.offload_names} est={plan.est_step_time*1e3:.1f}ms")
+        remat_policy = plan.policy()
+        if cfg.n_layers % plan.scan_group == 0:
+            scan_group = plan.scan_group
+
+    params = arch_init_params(cfg, jax.random.PRNGKey(args.seed))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"[model] {args.arch}{' (smoke)' if args.smoke else ''}: {n_params/1e6:.1f}M params")
+
+    opt = adafactor(lr=args.lr) if args.optimizer == "adafactor" else adamw(lr=args.lr)
+    state = TrainState(params=params, opt_state=opt.init(params), step=jnp.int32(0))
+    step_fn = jax.jit(make_train_step(cfg, opt, scan_group=scan_group,
+                                      remat_policy=remat_policy))
+
+    data = SyntheticLM(cfg, batch=args.batch, seq_len=args.seq, seed=args.seed)
+    batch_at = lambda s: {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+
+    losses = []
+    t0 = time.monotonic()
+
+    def on_metrics(step, m):
+        losses.append(float(m["loss"]))
+        if step % args.log_every == 0:
+            toks = args.batch * args.seq * step
+            print(f"step {step:5d} loss {losses[-1]:.4f} gnorm {float(m['grad_norm']):.3f} "
+                  f"({toks / max(1e-9, time.monotonic() - t0):.0f} tok/s)")
+
+    state, restarts = run_with_recovery(
+        init_state=state, train_step=step_fn, batch_at=batch_at,
+        n_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        on_metrics=on_metrics,
+    )
+    print(f"[done] steps={int(state.step)} loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"restarts={restarts} elapsed={time.monotonic()-t0:.1f}s")
+    return state
+
+
+if __name__ == "__main__":
+    train_main()

@@ -1,0 +1,77 @@
+"""Model zoo facade: one uniform API over decoder-only and enc-dec archs.
+
+``batch`` dicts carry: tokens (B,S) [+ labels for train; + frames (B,F,E) for
+audio; + vis_embeds (B,Nv,E) for VLM].
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from ..configs.base import ModelConfig
+from . import blocks, common
+from .attention import attention, decode_attention
+from .common import ParamDef, abstract_tree, init_tree, spec_tree
+from .decoder import (
+    cache_defs,
+    cross_entropy_loss,
+    decode_step,
+    default_scan_group,
+    forward,
+    model_defs,
+)
+from .encdec import (
+    encdec_cache_defs,
+    encdec_decode_step,
+    encdec_encode,
+    encdec_forward,
+    encdec_model_defs,
+)
+
+__all__ = [
+    "ParamDef", "abstract_tree", "init_tree", "spec_tree",
+    "arch_model_defs", "arch_forward", "arch_cache_defs", "arch_decode_step",
+    "arch_init_params", "cross_entropy_loss", "default_scan_group",
+    "attention", "decode_attention", "blocks", "common",
+]
+
+
+def arch_model_defs(cfg: ModelConfig, *, max_dec_positions: int = 32_768):
+    if cfg.encoder_layers:
+        return encdec_model_defs(cfg, max_dec_positions=max_dec_positions)
+    return model_defs(cfg)
+
+
+def arch_init_params(cfg: ModelConfig, key: jax.Array, **kw):
+    return init_tree(arch_model_defs(cfg, **kw), key)
+
+
+def arch_forward(
+    cfg: ModelConfig,
+    params,
+    batch: dict[str, Any],
+    *,
+    rules=None,
+    scan_group: int | None = None,
+    remat_policy=None,
+):
+    if cfg.encoder_layers:
+        return encdec_forward(cfg, params, batch["tokens"], batch["frames"], rules=rules)
+    return forward(
+        cfg, params, batch["tokens"],
+        vis_embeds=batch.get("vis_embeds"),
+        rules=rules, scan_group=scan_group, remat_policy=remat_policy,
+    )
+
+
+def arch_cache_defs(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.encoder_layers:
+        return encdec_cache_defs(cfg, batch, max_len)
+    return cache_defs(cfg, batch, max_len)
+
+
+def arch_decode_step(cfg: ModelConfig, params, cache, tokens, pos, *, rules=None):
+    if cfg.encoder_layers:
+        return encdec_decode_step(cfg, params, cache, tokens, pos, rules=rules)
+    return decode_step(cfg, params, cache, tokens, pos, rules=rules)

@@ -1,0 +1,248 @@
+"""Non-attention blocks: dense MLP (GLU), MoE, RG-LRU recurrent block,
+Mamba-2 SSD block — each with param defs + forward (+ decode step where the
+block carries state)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from ..sharding import shard
+from .common import ParamDef, activation, checkpoint_name
+
+__all__ = [
+    "mlp_defs", "mlp",
+    "moe_defs", "moe",
+    "rec_defs", "rec_block", "rec_decode", "rec_cache_defs",
+    "ssm_defs", "ssm_block", "ssm_decode", "ssm_cache_defs",
+]
+
+
+# --------------------------------------------------------------------------- #
+# dense MLP                                                                    #
+# --------------------------------------------------------------------------- #
+def mlp_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    defs = {
+        "wi": ParamDef((d, f), ("embed", "ff")),
+        "wo": ParamDef((f, d), ("ff", "embed")),
+    }
+    if cfg.glu:
+        defs["wg"] = ParamDef((d, f), ("embed", "ff"))
+    if cfg.mlp_bias:
+        defs["bi"] = ParamDef((f,), ("ff",), init="zeros")
+        defs["bo"] = ParamDef((d,), ("embed",), init="zeros")
+    return defs
+
+
+def mlp(cfg: ModelConfig, p: dict[str, Any], x: jax.Array, rules=None) -> jax.Array:
+    act = activation(cfg.act)
+    h = jnp.einsum("bse,ef->bsf", x, p["wi"].astype(x.dtype))
+    if cfg.mlp_bias:
+        h = h + p["bi"].astype(x.dtype)
+    if cfg.glu:
+        g = jnp.einsum("bse,ef->bsf", x, p["wg"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = shard(h, ("batch", "seq", "ff"), rules)
+    h = checkpoint_name(h, "mlp_hidden")
+    y = jnp.einsum("bsf,fe->bse", h, p["wo"].astype(x.dtype))
+    if cfg.mlp_bias:
+        y = y + p["bo"].astype(x.dtype)
+    return shard(y, ("batch", "seq", "embed"), rules)
+
+
+# --------------------------------------------------------------------------- #
+# MoE (top-k softmax routing, dense dispatch via one-hot matmul)               #
+# --------------------------------------------------------------------------- #
+def moe_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    defs = {
+        "router": ParamDef((d, e), ("embed", "experts"), scale=0.02),
+        "wi": ParamDef((e, d, f), ("experts", "embed", "ff")),
+        "wo": ParamDef((e, f, d), ("experts", "ff", "embed")),
+    }
+    if cfg.glu:
+        defs["wg"] = ParamDef((e, d, f), ("experts", "embed", "ff"))
+    return defs
+
+
+def moe(cfg: ModelConfig, p: dict[str, Any], x: jax.Array, rules=None) -> jax.Array:
+    """Top-k routed MoE.  Dense dispatch: every expert sees the full token set
+    weighted by its routing mass — collective-friendly on TPU (einsum over the
+    expert dim maps onto the sharded ff axis; no ragged all-to-all needed) and
+    exactly equal to sparse dispatch in value."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    act = activation(cfg.act)
+    logits = jnp.einsum("bse,ex->bsx", x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    topv, topi = jax.lax.top_k(logits, k)                 # (B,S,k)
+    gate = jax.nn.softmax(topv, axis=-1)                  # renormalized over top-k
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)   # (B,S,k,E)
+    comb = jnp.einsum("bskx,bsk->bsx", onehot, gate)      # (B,S,E)
+    comb = comb.astype(x.dtype)
+
+    h = jnp.einsum("bse,xef->bsxf", x, p["wi"].astype(x.dtype))
+    if cfg.glu:
+        g = jnp.einsum("bse,xef->bsxf", x, p["wg"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = shard(h, ("batch", "seq", "experts", "ff"), rules)
+    h = checkpoint_name(h, "moe_hidden")
+    y = jnp.einsum("bsxf,xfd->bsxd", h, p["wo"].astype(x.dtype))
+    y = jnp.einsum("bsxd,bsx->bsd", y, comb)
+    return shard(y, ("batch", "seq", "embed"), rules)
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU recurrent block (Griffin / RecurrentGemma)                            #
+# --------------------------------------------------------------------------- #
+def rec_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    cw = cfg.conv1d_width
+    return {
+        "wx": ParamDef((d, w), ("embed", "lru")),          # recurrent branch in
+        "wy": ParamDef((d, w), ("embed", "lru")),          # gate branch in
+        "conv_w": ParamDef((cw, w), ("conv", "lru"), scale=0.1),
+        "conv_b": ParamDef((w,), ("lru",), init="zeros"),
+        "a_param": ParamDef((w,), ("lru",), init="small"),
+        "w_input_gate": ParamDef((w, w), ("lru_in", "lru"), scale=0.02),
+        "b_input_gate": ParamDef((w,), ("lru",), init="zeros"),
+        "w_a_gate": ParamDef((w, w), ("lru_in", "lru"), scale=0.02),
+        "b_a_gate": ParamDef((w,), ("lru",), init="zeros"),
+        "wo": ParamDef((w, d), ("lru", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv1d.  x: (B,T,W); w: (CW,W).  state: (B,CW-1,W)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(cw))
+    new_state = xp[:, -(cw - 1) :] if cw > 1 else jnp.zeros_like(pad)
+    return y + b[None, None].astype(x.dtype), new_state
+
+
+def rec_block(cfg: ModelConfig, p: dict[str, Any], x: jax.Array, rules=None,
+              state: dict | None = None):
+    """Griffin recurrent block: (linear→GeLU gate) ⊙ (linear→conv→RG-LRU) → out."""
+    gate = jax.nn.gelu(jnp.einsum("bse,ew->bsw", x, p["wy"].astype(x.dtype)))
+    u = jnp.einsum("bse,ew->bsw", x, p["wx"].astype(x.dtype))
+    u = shard(u, ("batch", "seq", "lru"), rules)
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(u, p["conv_w"].astype(x.dtype), p["conv_b"], conv_state)
+    ig = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["w_input_gate"].astype(x.dtype)) + p["b_input_gate"].astype(x.dtype)
+    )
+    ag = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, p["w_a_gate"].astype(x.dtype)) + p["b_a_gate"].astype(x.dtype)
+    )
+    h0 = None if state is None else state["h"]
+    y, h_last = ops.rglru_scan(u, p["a_param"], ig, ag, h0)
+    y = checkpoint_name(y, "rec_out")
+    y = y * gate
+    out = jnp.einsum("bsw,we->bse", y, p["wo"].astype(x.dtype))
+    out = shard(out, ("batch", "seq", "embed"), rules)
+    new_state = None if state is None else {"h": h_last, "conv": new_conv}
+    return out, new_state
+
+
+def rec_cache_defs(cfg: ModelConfig, batch: int) -> dict[str, ParamDef]:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": ParamDef((batch, w), ("batch", "lru"), init="zeros"),
+        "conv": ParamDef((batch, cfg.conv1d_width - 1, w), ("batch", None, "lru"),
+                         init="zeros", dtype=jnp.dtype(cfg.dtype)),
+    }
+
+
+def rec_decode(cfg: ModelConfig, p: dict[str, Any], x: jax.Array, state: dict, rules=None):
+    out, new_state = rec_block(cfg, p, x, rules, state)
+    return out, new_state
+
+
+# --------------------------------------------------------------------------- #
+# Mamba-2 SSD block                                                            #
+# --------------------------------------------------------------------------- #
+def ssm_defs(cfg: ModelConfig) -> dict[str, ParamDef]:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, nh = cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    cw = cfg.conv1d_width
+    conv_ch = di + 2 * g * n
+    return {
+        "wz": ParamDef((d, di), ("embed", "ssm_inner")),
+        "wx": ParamDef((d, di), ("embed", "ssm_inner")),
+        "wB": ParamDef((d, g * n), ("embed", None)),
+        "wC": ParamDef((d, g * n), ("embed", None)),
+        "wdt": ParamDef((d, nh), ("embed", None), scale=0.02),
+        "dt_bias": ParamDef((nh,), (None,), init="zeros"),
+        "a_log": ParamDef((nh,), (None,), init="small"),
+        "d_skip": ParamDef((nh,), (None,), init="ones"),
+        "conv_w": ParamDef((cw, conv_ch), ("conv", None), scale=0.1),
+        "conv_b": ParamDef((conv_ch,), (None,), init="zeros"),
+        "norm_w": ParamDef((di,), ("ssm_inner",), init="ones"),
+        "wo": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _ssm_inner(cfg, p, x, conv_state, h0, rules):
+    b, t, _ = x.shape
+    di, g, n, nh, hp = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    z = jnp.einsum("bse,ei->bsi", x, p["wz"].astype(x.dtype))
+    xin = jnp.einsum("bse,ei->bsi", x, p["wx"].astype(x.dtype))
+    bmat = jnp.einsum("bse,en->bsn", x, p["wB"].astype(x.dtype))
+    cmat = jnp.einsum("bse,en->bsn", x, p["wC"].astype(x.dtype))
+    xbc = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xin, bmat, cmat = jnp.split(xbc, [di, di + g * n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bse,eh->bsh", x, p["wdt"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    xh = xin.reshape(b, t, nh, hp)
+    bmat = bmat.reshape(b, t, g, n)
+    cmat = cmat.reshape(b, t, g, n)
+    y, h_last = ops.ssd_chunked(xh, dt, p["a_log"], bmat, cmat, p["d_skip"], h0)
+    y = y.reshape(b, t, di)
+    y = checkpoint_name(y, "ssm_out")
+    # gated RMSNorm (mamba2)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm_w"].astype(jnp.float32)
+    y = yf.astype(x.dtype)
+    out = jnp.einsum("bsi,ie->bse", y, p["wo"].astype(x.dtype))
+    return shard(out, ("batch", "seq", "embed"), rules), new_conv, h_last
+
+
+def ssm_block(cfg: ModelConfig, p: dict[str, Any], x: jax.Array, rules=None,
+              state: dict | None = None):
+    conv_state = None if state is None else state["conv"]
+    h0 = None if state is None else state["h"]
+    out, new_conv, h_last = _ssm_inner(cfg, p, x, conv_state, h0, rules)
+    new_state = None if state is None else {"h": h_last, "conv": new_conv}
+    return out, new_state
+
+
+def ssm_cache_defs(cfg: ModelConfig, batch: int) -> dict[str, ParamDef]:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "h": ParamDef((batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                      ("batch", None, None, "state"), init="zeros"),
+        "conv": ParamDef((batch, cfg.conv1d_width - 1, conv_ch), ("batch", None, None),
+                         init="zeros", dtype=jnp.dtype(cfg.dtype)),
+    }
+
+
+def ssm_decode(cfg: ModelConfig, p: dict[str, Any], x: jax.Array, state: dict, rules=None):
+    return ssm_block(cfg, p, x, rules, state)

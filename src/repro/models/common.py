@@ -1,0 +1,125 @@
+"""Shared model machinery: parameter definitions (single source of truth for
+shape / logical sharding axes / init), norms, RoPE, activation helpers.
+
+Parameters are nested dicts whose leaves are ``ParamDef``s.  From one tree of
+defs we derive (a) initialized arrays, (b) ShapeDtypeStructs for the dry-run
+(no allocation), (c) PartitionSpecs via the logical-axis rules in
+``repro.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ParamDef",
+    "init_tree",
+    "abstract_tree",
+    "spec_tree",
+    "rms_norm",
+    "layer_norm",
+    "apply_rope",
+    "activation",
+    "checkpoint_name",
+]
+
+from jax.ad_checkpoint import checkpoint_name  # noqa: E402  (public alias)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical sharding axes per dim
+    init: str = "normal"                  # normal | zeros | ones | small
+    scale: float | None = None            # overrides fan-in scaling
+    dtype: Any = jnp.float32              # master params are fp32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(d: ParamDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "small":
+        return 0.1 * jax.random.normal(key, d.shape, d.dtype)
+    fan_in = d.shape[0] if len(d.shape) > 1 else max(1, d.shape[-1])
+    scale = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+    return scale * jax.random.normal(key, d.shape, d.dtype)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_tree(defs, key: jax.Array):
+    """Initialize every ParamDef leaf; keys folded from the leaf path."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract_tree(defs):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=_is_def
+    )
+
+
+def spec_tree(defs, rules: dict[str, Any]):
+    """Logical axes -> jax.sharding.PartitionSpec via a rules dict."""
+    from jax.sharding import PartitionSpec as P
+
+    def one(d: ParamDef):
+        return P(*(rules.get(a) if a is not None else None for a in d.axes))
+
+    return jax.tree.map(one, defs, is_leaf=_is_def)
+
+
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope_table(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions: (..., S) int -> (cos, sin) of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (S,) or (B, S) absolute token positions."""
+    d = x.shape[-1]
+    cos, sin = rope_table(positions, d, theta)  # (S, D/2) or (B, S, D/2)
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch & heads
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:              # (B, S, half)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]

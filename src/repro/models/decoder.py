@@ -1,0 +1,459 @@
+"""Unified decoder-only LM covering dense / MoE / SSM / hybrid archs.
+
+Uniform layer stacks are lowered as ``lax.scan`` over stacked parameters with
+**grouped remat**: layers are reshaped to (L/g, g, …) and the inner g-layer
+scan is wrapped in ``jax.checkpoint`` — the saved residency (and the group
+size g) is chosen by the HDATS planner (``repro.plan``).  Heterogeneous
+patterns (RecurrentGemma's rec/rec/local-attn) unroll as a Python loop with
+per-layer checkpointing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from . import blocks
+from .attention import attention, attn_defs, decode_attention, init_kv_cache_defs
+from .common import ParamDef, checkpoint_name, layer_norm, rms_norm
+
+__all__ = [
+    "model_defs",
+    "cache_defs",
+    "forward",
+    "decode_step",
+    "cross_entropy_loss",
+    "default_scan_group",
+]
+
+
+# --------------------------------------------------------------------------- #
+# parameter definitions                                                        #
+# --------------------------------------------------------------------------- #
+def _norm_defs(cfg: ModelConfig, name: str) -> dict[str, ParamDef]:
+    d = {f"{name}_w": ParamDef((cfg.d_model,), ("embed",), init="ones")}
+    if cfg.norm == "layernorm":
+        d[f"{name}_b"] = ParamDef((cfg.d_model,), ("embed",), init="zeros")
+    return d
+
+
+def _apply_norm(cfg: ModelConfig, p: dict, name: str, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p[f"{name}_w"], p[f"{name}_b"])
+    return rms_norm(x, p[f"{name}_w"])
+
+
+def layer_defs(cfg: ModelConfig, kind: str) -> dict[str, Any]:
+    defs: dict[str, Any] = {}
+    defs.update(_norm_defs(cfg, "ln1"))
+    if kind in ("attn", "attn_local"):
+        defs["attn"] = attn_defs(cfg)
+    elif kind == "rec":
+        defs["rec"] = blocks.rec_defs(cfg)
+    elif kind == "ssm":
+        defs["ssm"] = blocks.ssm_defs(cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff > 0 and kind != "ssm":
+        defs.update(_norm_defs(cfg, "ln2"))
+        defs["mlp"] = blocks.moe_defs(cfg) if cfg.n_experts else blocks.mlp_defs(cfg)
+    return defs
+
+
+def _stack_defs(defs, n: int):
+    return jax.tree.map(
+        lambda d: ParamDef((n, *d.shape), ("layers", *d.axes), d.init, d.scale, d.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def model_defs(cfg: ModelConfig) -> dict[str, Any]:
+    d, v = cfg.d_model, cfg.padded_vocab
+    defs: dict[str, Any] = {
+        "tok_emb": ParamDef((v, d), ("vocab", "embed"), scale=1.0),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, v), ("embed", "vocab"))
+    defs.update(_norm_defs(cfg, "ln_f"))
+    if cfg.uniform and cfg.scan_layers:
+        defs["layers"] = _stack_defs(layer_defs(cfg, cfg.kinds[0]), cfg.n_layers)
+    elif cfg.period_scan:
+        period = {f"slot_{j}": layer_defs(cfg, k) for j, k in enumerate(cfg.layer_pattern)}
+        defs["periods"] = _stack_defs(period, cfg.n_periods)
+        for j, kind in enumerate(cfg.tail_kinds):
+            defs[f"tail_{j:03d}"] = layer_defs(cfg, kind)
+    else:
+        for i, kind in enumerate(cfg.kinds):
+            defs[f"layer_{i:03d}"] = layer_defs(cfg, kind)
+    return defs
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict[str, Any]:
+    """Decode-cache definitions (window layers get ring caches of window size)."""
+    def one(kind: str) -> dict[str, ParamDef]:
+        if kind == "attn":
+            return init_kv_cache_defs(cfg, batch, max_len)
+        if kind == "attn_local":
+            return init_kv_cache_defs(cfg, batch, min(max_len, cfg.attn_window or max_len))
+        if kind == "rec":
+            return blocks.rec_cache_defs(cfg, batch)
+        if kind == "ssm":
+            return blocks.ssm_cache_defs(cfg, batch)
+        raise ValueError(kind)
+
+    if cfg.uniform and cfg.scan_layers:
+        return {"layers": _stack_defs(one(cfg.kinds[0]), cfg.n_layers)}
+    if cfg.period_scan:
+        period = {f"slot_{j}": one(k) for j, k in enumerate(cfg.layer_pattern)}
+        out = {"periods": _stack_defs(period, cfg.n_periods)}
+        for j, kind in enumerate(cfg.tail_kinds):
+            out[f"tail_{j:03d}"] = one(kind)
+        return out
+    return {f"layer_{i:03d}": one(kind) for i, kind in enumerate(cfg.kinds)}
+
+
+# --------------------------------------------------------------------------- #
+# forward (train / prefill)                                                    #
+# --------------------------------------------------------------------------- #
+def _mixer(cfg: ModelConfig, kind: str, p: dict, x: jax.Array, positions, rules):
+    h = _apply_norm(cfg, p, "ln1", x)
+    if kind == "attn":
+        return attention(cfg, p["attn"], h, positions=positions, causal=True, rules=rules)
+    if kind == "attn_local":
+        return attention(
+            cfg, p["attn"], h, positions=positions, causal=True,
+            window=cfg.attn_window, rules=rules,
+        )
+    if kind == "rec":
+        out, _ = blocks.rec_block(cfg, p["rec"], h, rules)
+        return out
+    if kind == "ssm":
+        out, _ = blocks.ssm_block(cfg, p["ssm"], h, rules)
+        return out
+    raise ValueError(kind)
+
+
+def _layer_fwd(cfg: ModelConfig, kind: str, p: dict, x: jax.Array, positions, rules):
+    x = x + _mixer(cfg, kind, p, x, positions, rules)
+    x = checkpoint_name(x, "resid_mid")
+    if cfg.d_ff > 0 and kind != "ssm":
+        h = _apply_norm(cfg, p, "ln2", x)
+        y = blocks.moe(cfg, p["mlp"], h, rules) if cfg.n_experts else blocks.mlp(cfg, p["mlp"], h, rules)
+        x = x + y
+    return checkpoint_name(x, "resid_out")
+
+
+def default_scan_group(cfg: ModelConfig) -> int:
+    """√L-ish remat group size that divides n_layers."""
+    L = cfg.n_layers
+    target = max(1, int(math.sqrt(L)))
+    for g in range(target, 0, -1):
+        if L % g == 0:
+            return g
+    return 1
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict[str, Any],
+    tokens: jax.Array,                 # (B, S) int32
+    *,
+    rules=None,
+    vis_embeds: jax.Array | None = None,   # (B, Nv, E) stub-frontend output
+    scan_group: int | None = None,
+    remat_policy=None,                 # jax.checkpoint policy (planner output)
+) -> jax.Array:
+    """Token logits (B, S, padded_vocab)."""
+    b, s = tokens.shape
+    x = jnp.take(params["tok_emb"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if vis_embeds is not None:
+        nv = vis_embeds.shape[1]
+        x = jnp.concatenate([vis_embeds.astype(x.dtype), x[:, nv:]], axis=1)
+    x = shard(x, ("batch", "seq", "embed"), rules)
+    positions = jnp.arange(s)
+
+    if cfg.uniform and cfg.scan_layers:
+        kind = cfg.kinds[0]
+        g = scan_group or default_scan_group(cfg)
+        assert cfg.n_layers % g == 0, (cfg.n_layers, g)
+        stacked = params["layers"]
+        grouped = jax.tree.map(lambda a: a.reshape(cfg.n_layers // g, g, *a.shape[1:]), stacked)
+
+        def one_layer(xc, lp):
+            return _layer_fwd(cfg, kind, lp, xc, positions, rules), None
+
+        if cfg.remat != "none":
+            # nested remat: the inner per-layer checkpoint keeps only layer
+            # INPUTS as scan residuals (weights + internals re-gathered /
+            # recomputed one layer at a time in bwd); the outer group
+            # checkpoint bounds the number of live layer inputs.
+            one_layer = jax.checkpoint(one_layer, policy=remat_policy)
+
+        def group_body(xc, gp):
+            xc, _ = jax.lax.scan(one_layer, xc, gp)
+            # group carries are the remat-saved residuals; optionally shard
+            # them over `model` along seq (rules "seq_carry")
+            xc = shard(xc, ("batch", "seq_carry", "embed"), rules)
+            return xc, None
+
+        if cfg.remat != "none":
+            group_body = jax.checkpoint(group_body, policy=remat_policy)
+        x, _ = jax.lax.scan(group_body, x, grouped)
+    elif cfg.period_scan:
+        def period_body(xc, pp):
+            for j, kind in enumerate(cfg.layer_pattern):
+                f = lambda xc2, lp2, kk=kind: _layer_fwd(cfg, kk, lp2, xc2, positions, rules)
+                if cfg.remat != "none":
+                    f = jax.checkpoint(f, policy=remat_policy)
+                xc = f(xc, pp[f"slot_{j}"])
+            return xc, None
+
+        if cfg.remat != "none":
+            period_body = jax.checkpoint(period_body, policy=remat_policy)
+        x, _ = jax.lax.scan(period_body, x, params["periods"])
+        for j, kind in enumerate(cfg.tail_kinds):
+            f = lambda xc, lp, kk=kind: _layer_fwd(cfg, kk, lp, xc, positions, rules)
+            if cfg.remat != "none":
+                f = jax.checkpoint(f, policy=remat_policy)
+            x = f(x, params[f"tail_{j:03d}"])
+    else:
+        for i, kind in enumerate(cfg.kinds):
+            f = lambda xc, lp, kk=kind: _layer_fwd(cfg, kk, lp, xc, positions, rules)
+            if cfg.remat != "none":
+                f = jax.checkpoint(f, policy=remat_policy)
+            x = f(x, params[f"layer_{i:03d}"])
+
+    x = _apply_norm(cfg, params, "ln_f", x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bse,ve->bsv", x, params["tok_emb"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bse,ev->bsv", x, params["lm_head"].astype(x.dtype))
+    return shard(logits, ("batch", "seq", "vocab"), rules)
+
+
+# --------------------------------------------------------------------------- #
+# prefill                                                                      #
+# --------------------------------------------------------------------------- #
+def _ring_from_full(k: jax.Array, window: int) -> jax.Array:
+    """Arrange the last `window` positions of (B,S,KVH,D) into ring slots."""
+    s = k.shape[1]
+    if s >= window:
+        tail = k[:, s - window :]
+        # slot of absolute position p is p % window; when window | s the tail
+        # lands in order, otherwise roll by (s - window) % window
+        shift = (s - window) % window
+        return jnp.roll(tail, shift=shift, axis=1) if shift else tail
+    pad = jnp.zeros((k.shape[0], window - s, *k.shape[2:]), k.dtype)
+    return jnp.concatenate([k, pad], axis=1)
+
+
+def _pad_cache(k: jax.Array, max_len: int) -> jax.Array:
+    s = k.shape[1]
+    if s == max_len:
+        return k
+    pad = jnp.zeros((k.shape[0], max_len - s, *k.shape[2:]), k.dtype)
+    return jnp.concatenate([k, pad], axis=1)
+
+
+def _layer_prefill(cfg, kind, p, x, positions, rules, max_len):
+    h = _apply_norm(cfg, p, "ln1", x)
+    if kind in ("attn", "attn_local"):
+        win = cfg.attn_window if kind == "attn_local" else None
+        out, (k, v) = attention(
+            cfg, p["attn"], h, positions=positions, causal=True, window=win,
+            rules=rules, return_kv=True,
+        )
+        if win is not None:
+            entry = {"k": _ring_from_full(k, min(max_len, win)),
+                     "v": _ring_from_full(v, min(max_len, win))}
+        else:
+            entry = {"k": _pad_cache(k, max_len), "v": _pad_cache(v, max_len)}
+    elif kind == "rec":
+        w = cfg.lru_width or cfg.d_model
+        zero = {
+            "h": jnp.zeros((x.shape[0], w), jnp.float32),
+            "conv": jnp.zeros((x.shape[0], cfg.conv1d_width - 1, w), x.dtype),
+        }
+        out, entry = blocks.rec_block(cfg, p["rec"], h, rules, state=zero)
+    elif kind == "ssm":
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        zero = {
+            "h": jnp.zeros((x.shape[0], cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                           jnp.float32),
+            "conv": jnp.zeros((x.shape[0], cfg.conv1d_width - 1, conv_ch), x.dtype),
+        }
+        out, entry = blocks.ssm_block(cfg, p["ssm"], h, rules, state=zero)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if cfg.d_ff > 0 and kind != "ssm":
+        hh = _apply_norm(cfg, p, "ln2", x)
+        y = blocks.moe(cfg, p["mlp"], hh, rules) if cfg.n_experts else blocks.mlp(cfg, p["mlp"], hh, rules)
+        x = x + y
+    return x, entry
+
+
+def prefill(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,
+    *,
+    vis_embeds: jax.Array | None = None,
+    max_len: int | None = None,
+    rules=None,
+):
+    """Forward the prompt and build the decode cache.
+
+    Returns (last_logits (B, padded_vocab), cache) — only the final position's
+    logits are materialized (full prefill logits would be seq × vocab)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = jnp.take(params["tok_emb"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if vis_embeds is not None:
+        nv = vis_embeds.shape[1]
+        x = jnp.concatenate([vis_embeds.astype(x.dtype), x[:, nv:]], axis=1)
+    x = shard(x, ("batch", "seq", "embed"), rules)
+    positions = jnp.arange(s)
+
+    if cfg.uniform and cfg.scan_layers:
+        kind = cfg.kinds[0]
+
+        def body(xc, lp):
+            xo, entry = _layer_prefill(cfg, kind, lp, xc, positions, rules, max_len)
+            return xo, entry
+
+        x, entries = jax.lax.scan(body, x, params["layers"])
+        cache = {"layers": entries}
+    elif cfg.period_scan:
+        def pbody(xc, pp):
+            out = {}
+            for j, kind in enumerate(cfg.layer_pattern):
+                xc, entry = _layer_prefill(cfg, kind, pp[f"slot_{j}"], xc, positions,
+                                           rules, max_len)
+                out[f"slot_{j}"] = entry
+            return xc, out
+
+        x, period_entries = jax.lax.scan(pbody, x, params["periods"])
+        cache = {"periods": period_entries}
+        for j, kind in enumerate(cfg.tail_kinds):
+            x, entry = _layer_prefill(cfg, kind, params[f"tail_{j:03d}"], x, positions,
+                                      rules, max_len)
+            cache[f"tail_{j:03d}"] = entry
+    else:
+        cache = {}
+        for i, kind in enumerate(cfg.kinds):
+            x, entry = _layer_prefill(
+                cfg, kind, params[f"layer_{i:03d}"], x, positions, rules, max_len
+            )
+            cache[f"layer_{i:03d}"] = entry
+
+    x_last = _apply_norm(cfg, params, "ln_f", x[:, -1:])
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bse,ve->bsv", x_last, params["tok_emb"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bse,ev->bsv", x_last, params["lm_head"].astype(x.dtype))
+    return logits[:, 0], cache
+
+
+# --------------------------------------------------------------------------- #
+# decode                                                                       #
+# --------------------------------------------------------------------------- #
+def _layer_decode(cfg, kind, p, x, cache, pos, rules):
+    h = _apply_norm(cfg, p, "ln1", x)
+    if kind in ("attn", "attn_local"):
+        win = cfg.attn_window if kind == "attn_local" else None
+        out, new_cache = decode_attention(cfg, p["attn"], h, cache, pos, window=win, rules=rules)
+    elif kind == "rec":
+        out, new_cache = blocks.rec_decode(cfg, p["rec"], h, cache, rules)
+    elif kind == "ssm":
+        out, new_cache = blocks.ssm_decode(cfg, p["ssm"], h, cache, rules)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if cfg.d_ff > 0 and kind != "ssm":
+        h = _apply_norm(cfg, p, "ln2", x)
+        y = blocks.moe(cfg, p["mlp"], h, rules) if cfg.n_experts else blocks.mlp(cfg, p["mlp"], h, rules)
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict[str, Any],
+    cache: dict[str, Any],
+    tokens: jax.Array,        # (B, 1)
+    pos: jax.Array,           # scalar int32
+    *,
+    rules=None,
+) -> tuple[jax.Array, dict[str, Any]]:
+    """One decode step.  Returns (logits (B, padded_vocab), new cache)."""
+    x = jnp.take(params["tok_emb"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+    if cfg.uniform and cfg.scan_layers:
+        kind = cfg.kinds[0]
+
+        def body(xc, inp):
+            lp, lc = inp
+            xo, nc = _layer_decode(cfg, kind, lp, xc, lc, pos, rules)
+            return xo, nc
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers}
+    elif cfg.period_scan:
+        def pbody(xc, inp):
+            pp, cc = inp
+            out = {}
+            for j, kind in enumerate(cfg.layer_pattern):
+                xc, nc = _layer_decode(cfg, kind, pp[f"slot_{j}"], xc, cc[f"slot_{j}"], pos, rules)
+                out[f"slot_{j}"] = nc
+            return xc, out
+
+        x, new_periods = jax.lax.scan(pbody, x, (params["periods"], cache["periods"]))
+        new_cache = {"periods": new_periods}
+        for j, kind in enumerate(cfg.tail_kinds):
+            x, nc = _layer_decode(cfg, kind, params[f"tail_{j:03d}"], x,
+                                  cache[f"tail_{j:03d}"], pos, rules)
+            new_cache[f"tail_{j:03d}"] = nc
+    else:
+        new_cache = {}
+        for i, kind in enumerate(cfg.kinds):
+            x, nc = _layer_decode(cfg, kind, params[f"layer_{i:03d}"], x, cache[f"layer_{i:03d}"], pos, rules)
+            new_cache[f"layer_{i:03d}"] = nc
+
+    x = _apply_norm(cfg, params, "ln_f", x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bse,ve->bsv", x, params["tok_emb"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bse,ev->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits[:, 0], new_cache
+
+
+# --------------------------------------------------------------------------- #
+def cross_entropy_loss(
+    cfg: ModelConfig,
+    logits: jax.Array,        # (B, S, padded_vocab)
+    labels: jax.Array,        # (B, S) int32; -1 = ignore
+    z_loss: float = 1e-4,
+) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    # mask padded vocab entries out of the softmax
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, (lf.shape[-1],), 0)
+    lf = jnp.where(vocab_ids[None, None, :] < cfg.vocab_size, lf, -1e30)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(logz)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

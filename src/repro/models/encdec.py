@@ -1,0 +1,249 @@
+"""Encoder–decoder transformer (Whisper backbone).
+
+The audio frontend (2×conv1d stem + log-mel) is a STUB per the brief:
+``frames`` arrive as precomputed frame embeddings (B, n_frames, d_model)
+with sinusoidal positions already added.  Everything transformer-side is
+real: bidirectional encoder, causal decoder with cross-attention, learned
+decoder positions, LayerNorm + GELU + biased projections, tied embeddings.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from ..sharding import shard
+from . import blocks
+from .attention import attention, attn_defs, decode_attention, init_kv_cache_defs
+from .common import ParamDef, checkpoint_name, layer_norm
+
+__all__ = [
+    "encdec_model_defs",
+    "encdec_forward",
+    "encdec_encode",
+    "encdec_cache_defs",
+    "encdec_decode_step",
+]
+
+
+def _ln_defs(cfg: ModelConfig, name: str) -> dict[str, ParamDef]:
+    return {
+        f"{name}_w": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        f"{name}_b": ParamDef((cfg.d_model,), ("embed",), init="zeros"),
+    }
+
+
+def _enc_layer_defs(cfg: ModelConfig) -> dict[str, Any]:
+    return {
+        **_ln_defs(cfg, "ln1"),
+        "attn": attn_defs(cfg),
+        **_ln_defs(cfg, "ln2"),
+        "mlp": blocks.mlp_defs(cfg),
+    }
+
+
+def _dec_layer_defs(cfg: ModelConfig) -> dict[str, Any]:
+    return {
+        **_ln_defs(cfg, "ln1"),
+        "self_attn": attn_defs(cfg),
+        **_ln_defs(cfg, "ln_x"),
+        "cross_attn": attn_defs(cfg, cross=True),
+        **_ln_defs(cfg, "ln2"),
+        "mlp": blocks.mlp_defs(cfg),
+    }
+
+
+def _stack(defs, n: int):
+    return jax.tree.map(
+        lambda d: ParamDef((n, *d.shape), ("layers", *d.axes), d.init, d.scale, d.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def encdec_model_defs(cfg: ModelConfig, max_dec_positions: int = 32_768) -> dict[str, Any]:
+    d, v = cfg.d_model, cfg.padded_vocab
+    return {
+        "tok_emb": ParamDef((v, d), ("vocab", "embed"), scale=1.0),
+        "pos_emb": ParamDef((max_dec_positions, d), (None, "embed"), scale=0.02),
+        "enc_layers": _stack(_enc_layer_defs(cfg), cfg.encoder_layers),
+        "dec_layers": _stack(_dec_layer_defs(cfg), cfg.n_layers),
+        **_ln_defs(cfg, "ln_enc_f"),
+        **_ln_defs(cfg, "ln_dec_f"),
+    }
+
+
+def _ln(p, name, x):
+    return layer_norm(x, p[f"{name}_w"], p[f"{name}_b"])
+
+
+def encdec_encode(cfg: ModelConfig, params, frames: jax.Array, *, rules=None) -> jax.Array:
+    """frames: (B, F, E) stub-frontend output -> encoder states (B, F, E)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = shard(x, ("batch", "seq", "embed"), rules)
+    positions = jnp.arange(x.shape[1])
+
+    def body(xc, lp):
+        h = _ln(lp, "ln1", xc)
+        xc = xc + attention(cfg, lp["attn"], h, positions=positions, causal=False,
+                            rope=False, rules=rules)
+        h = _ln(lp, "ln2", xc)
+        xc = xc + blocks.mlp(cfg, lp["mlp"], h, rules)
+        return checkpoint_name(xc, "enc_resid"), None
+
+    body = jax.checkpoint(body) if cfg.remat != "none" else body
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:  # unrolled (roofline calibration mode)
+        for i in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_layers"]))
+    return _ln(params, "ln_enc_f", x)
+
+
+def encdec_forward(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,        # (B, S)
+    frames: jax.Array,        # (B, F, E)
+    *,
+    rules=None,
+) -> jax.Array:
+    enc = encdec_encode(cfg, params, frames, rules=rules)
+    b, s = tokens.shape
+    x = jnp.take(params["tok_emb"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_emb"], 0, s, axis=0).astype(x.dtype)[None]
+    x = shard(x, ("batch", "seq", "embed"), rules)
+    positions = jnp.arange(s)
+    enc_positions = jnp.arange(enc.shape[1])
+
+    def body(xc, lp):
+        h = _ln(lp, "ln1", xc)
+        xc = xc + attention(cfg, lp["self_attn"], h, positions=positions, causal=True,
+                            rope=False, rules=rules)
+        h = _ln(lp, "ln_x", xc)
+        xc = xc + attention(cfg, lp["cross_attn"], h, positions=enc_positions, causal=False,
+                            rope=False, kv_x=enc, rules=rules)
+        h = _ln(lp, "ln2", xc)
+        xc = xc + blocks.mlp(cfg, lp["mlp"], h, rules)
+        return checkpoint_name(xc, "dec_resid"), None
+
+    body = jax.checkpoint(body) if cfg.remat != "none" else body
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    else:  # unrolled (roofline calibration mode)
+        for i in range(cfg.n_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["dec_layers"]))
+    x = _ln(params, "ln_dec_f", x)
+    logits = jnp.einsum("bse,ve->bsv", x, params["tok_emb"].astype(x.dtype))
+    return shard(logits, ("batch", "seq", "vocab"), rules)
+
+
+# --------------------------------------------------------------------------- #
+def encdec_prefill(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,       # (B, S) decoder prompt
+    frames: jax.Array,       # (B, F, E)
+    *,
+    max_len: int | None = None,
+    rules=None,
+):
+    """Encode + decoder prefill.  Returns (last_logits (B, V), cache)."""
+    from .decoder import _pad_cache  # shared helper
+
+    b, s = tokens.shape
+    max_len = max_len or s
+    enc = encdec_encode(cfg, params, frames, rules=rules)
+    x = jnp.take(params["tok_emb"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_emb"], 0, s, axis=0).astype(x.dtype)[None]
+    x = shard(x, ("batch", "seq", "embed"), rules)
+    positions = jnp.arange(s)
+    enc_positions = jnp.arange(enc.shape[1])
+
+    def body(xc, lp):
+        h = _ln(lp, "ln1", xc)
+        out, (k, v) = attention(cfg, lp["self_attn"], h, positions=positions,
+                                causal=True, rope=False, rules=rules, return_kv=True)
+        xc = xc + out
+        h = _ln(lp, "ln_x", xc)
+        # cross attention + cache its K/V (computed once from encoder states)
+        ck = jnp.einsum("bse,ehd->bshd", enc, lp["cross_attn"]["wk"].astype(enc.dtype))
+        cv = jnp.einsum("bse,ehd->bshd", enc, lp["cross_attn"]["wv"].astype(enc.dtype))
+        if cfg.qkv_bias:
+            ck = ck + lp["cross_attn"]["bk"].astype(enc.dtype)
+            cv = cv + lp["cross_attn"]["bv"].astype(enc.dtype)
+        xc = xc + attention(cfg, lp["cross_attn"], h, positions=enc_positions,
+                            causal=False, rope=False, kv_x=enc, rules=rules)
+        h = _ln(lp, "ln2", xc)
+        xc = xc + blocks.mlp(cfg, lp["mlp"], h, rules)
+        entry = {"k": _pad_cache(k, max_len), "v": _pad_cache(v, max_len)}
+        return xc, (entry, ck, cv)
+
+    x, (self_entries, cks, cvs) = jax.lax.scan(body, x, params["dec_layers"])
+    x_last = _ln(params, "ln_dec_f", x[:, -1:])
+    logits = jnp.einsum("bse,ve->bsv", x_last, params["tok_emb"].astype(x.dtype))
+    cache = {"self": self_entries, "cross_k": cks, "cross_v": cvs}
+    return logits[:, 0], cache
+
+
+def encdec_cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict[str, Any]:
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "self": _stack(init_kv_cache_defs(cfg, batch, max_len), cfg.n_layers),
+        "cross_k": ParamDef((cfg.n_layers, batch, cfg.n_frames, kvh, hd),
+                            ("layers", "batch", None, "kv_heads", "head_dim"),
+                            init="zeros", dtype=dt),
+        "cross_v": ParamDef((cfg.n_layers, batch, cfg.n_frames, kvh, hd),
+                            ("layers", "batch", None, "kv_heads", "head_dim"),
+                            init="zeros", dtype=dt),
+    }
+
+
+def _cross_decode(cfg, p, x, ck, cv):
+    """Single-token cross-attention over fixed encoder KV (B, F, KVH, HD)."""
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    out = ops.flash_attention(q, ck, cv, causal=False, impl="reference")
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(x.dtype))
+    if cfg.qkv_bias:
+        y = y + p["bo"].astype(x.dtype)
+    return y
+
+
+def encdec_decode_step(
+    cfg: ModelConfig,
+    params,
+    cache: dict[str, Any],
+    tokens: jax.Array,       # (B, 1)
+    pos: jax.Array,          # scalar
+    *,
+    rules=None,
+):
+    x = jnp.take(params["tok_emb"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = x + jnp.take(params["pos_emb"], pos, axis=0).astype(x.dtype)[None, None]
+
+    def body(xc, inp):
+        lp, self_c, ck, cv = inp
+        h = _ln(lp, "ln1", xc)
+        out, new_self = decode_attention(cfg, lp["self_attn"], h, self_c, pos,
+                                         rope=False, rules=rules)
+        xc = xc + out
+        h = _ln(lp, "ln_x", xc)
+        xc = xc + _cross_decode(cfg, lp["cross_attn"], h, ck, cv)
+        h = _ln(lp, "ln2", xc)
+        xc = xc + blocks.mlp(cfg, lp["mlp"], h, rules)
+        return xc, new_self
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self"], cache["cross_k"], cache["cross_v"])
+    )
+    x = _ln(params, "ln_dec_f", x)
+    logits = jnp.einsum("bse,ve->bsv", x, params["tok_emb"].astype(x.dtype))
+    new_cache = {"self": new_self, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+    return logits[:, 0], new_cache

@@ -1,0 +1,13 @@
+from .cost import (
+    HBM_BW, HBM_BYTES, HOST_BW, ICI_BW, PEAK_FLOPS,
+    hbm_activation_budget, layer_costs, param_state_bytes,
+)
+from .extract import ACT_CLASSES, pipeline_instance, residency_instance
+from .planner import ResidencyPlan, plan_pipeline, plan_residency, plan_residency_lb
+
+__all__ = [
+    "HBM_BW", "HBM_BYTES", "HOST_BW", "ICI_BW", "PEAK_FLOPS",
+    "hbm_activation_budget", "layer_costs", "param_state_bytes",
+    "ACT_CLASSES", "pipeline_instance", "residency_instance",
+    "ResidencyPlan", "plan_pipeline", "plan_residency", "plan_residency_lb",
+]

@@ -1,0 +1,10 @@
+from .optimizer import Optimizer, adafactor, adamw, global_norm
+from .train import TrainState, make_prefill_step, make_serve_step, make_train_step
+from .data import DataState, SyntheticLM
+from . import checkpoint, elastic
+
+__all__ = [
+    "Optimizer", "adafactor", "adamw", "global_norm",
+    "TrainState", "make_prefill_step", "make_serve_step", "make_train_step",
+    "DataState", "SyntheticLM", "checkpoint", "elastic",
+]

@@ -1,0 +1,88 @@
+"""Train / prefill / serve step builders — the functions the launcher jits.
+
+``make_train_step`` closes over (config, optimizer, sharding rules, remat
+plan) and returns the pure (state, batch) -> (state, metrics) function; the
+launcher wraps it in ``jax.jit`` with in/out shardings from ``spec_tree``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import arch_forward, cross_entropy_loss
+from .optimizer import Optimizer
+
+__all__ = ["TrainState", "make_train_step", "make_prefill_step", "make_serve_step"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    *,
+    rules=None,
+    scan_group: int | None = None,
+    remat_policy=None,
+    z_loss: float = 1e-4,
+):
+    def loss_fn(params, batch):
+        logits = arch_forward(
+            cfg, params, batch,
+            rules=rules, scan_group=scan_group, remat_policy=remat_policy,
+        )
+        loss = cross_entropy_loss(cfg, logits, batch["labels"], z_loss=z_loss)
+        return loss
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        new_params, new_opt, opt_metrics = optimizer.apply(
+            state.params, grads, state.opt_state, state.step
+        )
+        metrics = {"loss": loss, **opt_metrics}
+        return TrainState(params=new_params, opt_state=new_opt, step=state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, rules=None, max_len: int | None = None):
+    """Prefill: forward the prompt, emit last-position logits + decode cache."""
+    from ..models.decoder import prefill
+    from ..models.encdec import encdec_prefill
+
+    def prefill_step(params, batch):
+        if cfg.encoder_layers:
+            return encdec_prefill(cfg, params, batch["tokens"], batch["frames"],
+                                  max_len=max_len, rules=rules)
+        return prefill(cfg, params, batch["tokens"],
+                       vis_embeds=batch.get("vis_embeds"), max_len=max_len, rules=rules)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, rules=None, temperature: float = 0.0):
+    """One decode step: (params, cache, tokens (B,1), pos, key) -> (next (B,1), cache)."""
+    from ..models import arch_decode_step
+
+    def serve_step(params, cache, tokens, pos, key):
+        logits, new_cache = arch_decode_step(cfg, params, cache, tokens, pos, rules=rules)
+        lf = logits.astype(jnp.float32)
+        vocab_ids = jax.lax.broadcasted_iota(jnp.int32, (lf.shape[-1],), 0)
+        lf = jnp.where(vocab_ids[None, :] < cfg.vocab_size, lf, -1e30)
+        if temperature == 0.0:
+            nxt = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(key, lf / temperature, axis=-1).astype(jnp.int32)
+        return nxt[:, None], new_cache
+
+    return serve_step

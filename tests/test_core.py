@@ -1,0 +1,223 @@
+"""HDATS core: schedule semantics, construction, memory update, tabu search.
+
+Includes hypothesis property tests over randomly generated instances and a
+brute-force optimality check on micro instances.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    TSParams,
+    brute_force_optimum,
+    build_ilp,
+    construct_greedy,
+    critical_blocks,
+    durations,
+    exact_schedule,
+    heads_tails,
+    load_balance,
+    memory_feasible,
+    memory_peaks,
+    memory_update,
+    random_instance,
+    tabu_search,
+    validate_instance,
+)
+
+
+def small_instance(seed=0, **kw):
+    kw.setdefault("n_tasks", 40)
+    kw.setdefault("n_data", 100)
+    return random_instance(seed, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# schedule semantics                                                           #
+# --------------------------------------------------------------------------- #
+def assert_schedule_valid(inst, sol, sched):
+    dur = durations(inst, sol.assign, sol.mem)
+    # precedence: every task starts after all DAG predecessors finish
+    for v in range(inst.n_tasks):
+        for u in inst.preds(v):
+            assert sched.finish[u] <= sched.start[v] + 1e-6
+    # machine exclusivity: sequences execute back-to-back or later
+    for p, seq in enumerate(sol.proc_seq):
+        for a, b in zip(seq, seq[1:]):
+            assert sched.finish[a] <= sched.start[b] + 1e-6
+        for t in seq:
+            assert sol.assign[t] == p
+            assert np.isfinite(inst.proc_time[t, p]), "task on incompatible core"
+    # durations consistent
+    np.testing.assert_allclose(sched.finish - sched.start, dur, rtol=1e-9)
+
+
+@pytest.mark.parametrize("builder", [load_balance, lambda i: construct_greedy(i, "slack_first")])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_constructors_produce_valid_feasible_schedules(builder, seed):
+    inst = small_instance(seed)
+    sol = builder(inst)
+    sched = exact_schedule(inst, sol)
+    assert sched is not None
+    assert_schedule_valid(inst, sol, sched)
+    assert memory_feasible(inst, sol, sched)
+    # every task scheduled exactly once
+    all_tasks = sorted(t for seq in sol.proc_seq for t in seq)
+    assert all_tasks == list(range(inst.n_tasks))
+
+
+@pytest.mark.parametrize("strategy", ["slack_first", "r_first", "random", "relax_r"])
+def test_greedy_strategies(strategy):
+    inst = small_instance(3)
+    sol = construct_greedy(inst, strategy, rng=7)
+    sched = exact_schedule(inst, sol)
+    assert sched is not None and sched.makespan > 0
+    assert memory_feasible(inst, sol, sched)
+
+
+def test_heads_tails_invariants():
+    inst = small_instance(1)
+    sol = construct_greedy(inst, "slack_first")
+    sched = exact_schedule(inst, sol)
+    r, q, slack, crit = heads_tails(inst, sol, sched)
+    assert np.allclose(r, sched.start)
+    # C_max = max(R + Q); slack >= 0; critical tasks have slack 0
+    assert np.isclose((r + q).max(), sched.makespan, rtol=1e-9)
+    assert (slack >= -1e-6).all()
+    assert crit.any()
+    assert np.allclose(slack[crit], 0, atol=1e-5 * sched.makespan)
+    # a critical path exists: some critical task finishes at makespan
+    assert np.isclose(sched.finish[crit].max(), sched.makespan)
+
+
+def test_memory_update_restores_feasibility_and_uses_fast_tiers():
+    inst = small_instance(4, fast_mem_fraction=0.15)
+    sol = construct_greedy(inst, "slack_first")
+    # deliberately break: put everything in fast tier 0
+    bad = sol.copy()
+    bad.mem[:] = 0
+    bad.mem[~inst.data_mem_ok[:, 0]] = inst.n_mems - 1
+    sched = exact_schedule(inst, bad)
+    fixed = memory_update(inst, bad)
+    sched2 = exact_schedule(inst, fixed)
+    assert memory_feasible(inst, fixed, sched2)
+    # it should still use fast memory for some blocks
+    assert (fixed.mem < inst.n_mems - 1).any()
+
+
+def test_memory_peaks_differential_array():
+    inst = small_instance(5)
+    sol = construct_greedy(inst, "slack_first")
+    sched = exact_schedule(inst, sol)
+    peaks = memory_peaks(inst, sol, sched)
+    # brute check against dense time sampling for tier 0
+    from repro.core.solution import data_lifetimes
+
+    birth, death = data_lifetimes(inst, sched)
+    ts = np.unique(np.concatenate([birth, death]))
+    for m in range(inst.n_mems - 1):
+        sel = sol.mem == m
+        dense = max(
+            (inst.data_size[sel & (birth <= t) & (death > t)]).sum() for t in ts
+        ) if sel.any() else 0.0
+        assert peaks[m] >= dense - 1e-6
+
+
+# --------------------------------------------------------------------------- #
+# tabu search                                                                  #
+# --------------------------------------------------------------------------- #
+def test_tabu_improves_and_stays_feasible():
+    inst = small_instance(6)
+    init = construct_greedy(inst, "slack_first")
+    res = tabu_search(inst, init, TSParams(max_unimproved=40, time_limit=15, top_k=6, seed=1))
+    assert res.best_makespan <= res.initial_makespan + 1e-9
+    sched = exact_schedule(inst, res.best)
+    assert sched is not None
+    assert np.isclose(sched.makespan, res.best_makespan, rtol=1e-9)
+    assert_schedule_valid(inst, res.best, sched)
+    assert memory_feasible(inst, res.best, sched)
+
+
+def test_tabu_beats_load_balance():
+    """The paper's headline: TS improves on LB (5–25% at paper scale)."""
+    gaps = []
+    for seed in range(3):
+        inst = small_instance(seed + 10, n_tasks=50, n_data=120)
+        lb = load_balance(inst)
+        lb_mk = exact_schedule(inst, lb).makespan
+        init = construct_greedy(inst, "slack_first")
+        res = tabu_search(inst, init, TSParams(max_unimproved=60, time_limit=20, top_k=8))
+        gaps.append(1 - res.best_makespan / lb_mk)
+    assert max(gaps) > 0.02, f"TS should beat LB somewhere: {gaps}"
+    assert min(gaps) > -0.01, f"TS should never lose to LB: {gaps}"
+
+
+def test_critical_blocks_structure():
+    inst = small_instance(7)
+    sol = construct_greedy(inst, "slack_first")
+    sched = exact_schedule(inst, sol)
+    _, _, _, crit = heads_tails(inst, sol, sched)
+    for p, lo, hi in critical_blocks(sol, crit):
+        assert hi - lo >= 1
+        for k in range(lo, hi + 1):
+            assert crit[sol.proc_seq[p][k]]
+
+
+def test_brute_force_optimality_micro():
+    inst = random_instance(
+        42, n_tasks=5, n_data=6, n_fast_cores=1, n_slow_cores=1,
+        edges_per_task=2.0, n_fast_tiers=1, core_restrict_prob=0.0,
+    )
+    opt_mk, opt_sol = brute_force_optimum(inst)
+    init = construct_greedy(inst, "slack_first")
+    res = tabu_search(inst, init, TSParams(max_unimproved=200, time_limit=20, top_k=10))
+    assert res.best_makespan >= opt_mk - 1e-6, "TS cannot beat the proven optimum"
+    assert res.best_makespan <= opt_mk * 1.10 + 1e-6, (
+        f"TS should be within 10% of optimum: {res.best_makespan} vs {opt_mk}"
+    )
+
+
+def test_ilp_model_shape():
+    inst = random_instance(0, n_tasks=4, n_data=5, n_fast_cores=1, n_slow_cores=1,
+                           n_fast_tiers=1)
+    ilp = build_ilp(inst, n_stages=8)
+    assert ilp["n_vars"] > 0
+    eqs = {r["paper_eq"] for r in ilp["rows"]}
+    assert {2, 3, 8, 9, 17} <= eqs
+    for r in ilp["rows"]:
+        assert len(r["cols"]) == len(r["coefs"])
+        assert r["sense"] in ("==", "<=")
+
+
+# --------------------------------------------------------------------------- #
+# hypothesis properties                                                        #
+# --------------------------------------------------------------------------- #
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_tasks=st.integers(8, 40),
+    frac=st.sampled_from([0.1, 0.2, 0.5]),
+)
+def test_property_pipeline_valid(seed, n_tasks, frac):
+    inst = random_instance(seed, n_tasks=n_tasks, n_data=2 * n_tasks,
+                           fast_mem_fraction=frac)
+    validate_instance(inst)
+    sol = construct_greedy(inst, "slack_first", rng=seed)
+    sched = exact_schedule(inst, sol)
+    assert sched is not None
+    assert_schedule_valid(inst, sol, sched)
+    assert memory_feasible(inst, sol, sched)
+    r, q, slack, crit = heads_tails(inst, sol, sched)
+    assert np.isclose((r + q).max(), sched.makespan, rtol=1e-9)
+    assert crit.any()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_memory_update_feasible(seed):
+    inst = random_instance(seed, n_tasks=20, n_data=50, fast_mem_fraction=0.1)
+    sol = load_balance(inst)
+    out = memory_update(inst, sol, refresh_every=4)
+    sched = exact_schedule(inst, out)
+    assert sched is not None
+    assert memory_feasible(inst, out, sched)

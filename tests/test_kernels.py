@@ -1,0 +1,171 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rglru import rglru_pallas
+from repro.kernels.ssd import ssd_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def k(i):
+    return jax.random.fold_in(KEY, i)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,sq,skv,h,kvh,d,causal,window,qoff,bq,bkv",
+    [
+        (2, 256, 256, 4, 2, 64, True, None, 0, 128, 128),
+        (1, 128, 128, 8, 8, 128, False, None, 0, 128, 128),
+        (2, 128, 512, 4, 1, 64, True, 128, 0, 64, 128),
+        (1, 256, 512, 4, 4, 64, True, None, 256, 128, 256),
+        (1, 384, 384, 6, 2, 32, True, None, 0, 128, 128),
+        (2, 256, 256, 2, 1, 64, True, 64, 0, 128, 64),
+    ],
+)
+def test_flash_attention_sweep(b, sq, skv, h, kvh, d, causal, window, qoff, bq, bkv, dtype):
+    q = jax.random.normal(k(1), (b, sq, h, d), dtype)
+    kk = jax.random.normal(k(2), (b, skv, kvh, d), dtype)
+    v = jax.random.normal(k(3), (b, skv, kvh, d), dtype)
+    out = flash_attention_pallas(
+        q, kk, v, causal=causal, window=window, q_offset=qoff,
+        block_q=bq, block_kv=bkv, interpret=True,
+    )
+    want = ref.attention_reference(q, kk, v, causal=causal, window=window, q_offset=qoff)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+def test_flash_attention_lse():
+    q = jax.random.normal(k(4), (2, 256, 4, 64))
+    kk = jax.random.normal(k(5), (2, 256, 2, 64))
+    v = jax.random.normal(k(6), (2, 256, 2, 64))
+    out, lse = flash_attention_pallas(q, kk, v, causal=True, interpret=True, return_lse=True)
+    want, lse_ref = ref.attention_reference(q, kk, v, causal=True, return_lse=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_nondivisible_falls_back():
+    q = jax.random.normal(k(7), (1, 100, 2, 32))
+    kk = jax.random.normal(k(8), (1, 100, 2, 32))
+    out = flash_attention_pallas(q, kk, kk, causal=True, interpret=True)
+    want = ref.attention_reference(q, kk, kk, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_matches_oracle():
+    q = jax.random.normal(k(20), (2, 512, 4, 32))
+    kk = jax.random.normal(k(21), (2, 512, 2, 32))
+    v = jax.random.normal(k(22), (2, 512, 2, 32))
+    for win, off in [(None, 0), (128, 0), (None, 512)]:
+        a = ref.attention_chunked_reference(q, kk, v, causal=True, window=win,
+                                            q_offset=off, chunk=128)
+        b = ref.attention_reference(q, kk, v, causal=True, window=win, q_offset=off)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,t,d,bt", [(2, 512, 64, 256), (1, 256, 128, 128), (3, 128, 32, 64)])
+def test_rglru_sweep(b, t, d, bt, dtype):
+    x = jax.random.normal(k(9), (b, t, d), dtype)
+    ap = jax.random.normal(k(10), (d,))
+    ig = jax.nn.sigmoid(jax.random.normal(k(11), (b, t, d))).astype(dtype)
+    ag = jax.nn.sigmoid(jax.random.normal(k(12), (b, t, d))).astype(dtype)
+    h0 = jax.random.normal(k(13), (b, d))
+    y, h = rglru_pallas(x, ap, ig, ag, h0, block_t=bt, interpret=True)
+    yr, hr = ref.rglru_reference(x, ap, ig, ag, h0)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), **tol(dtype))
+
+
+def test_rglru_no_initial_state():
+    x = jax.random.normal(k(14), (2, 256, 32))
+    ap = jax.random.normal(k(15), (32,))
+    g = jax.nn.sigmoid(jax.random.normal(k(16), (2, 256, 32)))
+    y, h = rglru_pallas(x, ap, g, g, None, block_t=128, interpret=True)
+    yr, hr = ref.rglru_reference(x, ap, g, g, None)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,t,h,p,g,n,ch", [
+    (2, 256, 4, 32, 2, 64, 128),
+    (1, 256, 4, 64, 1, 128, 64),
+    (2, 128, 8, 16, 8, 32, 128),
+    (1, 512, 2, 32, 1, 64, 256),
+])
+def test_ssd_sweep(b, t, h, p, g, n, ch):
+    x = jax.random.normal(k(17), (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(k(18), (b, t, h)))
+    alog = 0.5 * jax.random.normal(k(19), (h,))
+    bm = 0.3 * jax.random.normal(k(20), (b, t, g, n))
+    cm = 0.3 * jax.random.normal(k(21), (b, t, g, n))
+    dsk = jax.random.normal(k(22), (h,))
+    h0 = 0.1 * jax.random.normal(k(23), (b, h, p, n))
+    y, hl = ssd_pallas(x, dt, alog, bm, cm, dsk, h0, chunk=ch, interpret=True)
+    yr, hlr = ref.ssd_reference(x, dt, alog, bm, cm, dsk, h0)
+    scale = float(jnp.max(jnp.abs(yr))) + 1e-9
+    assert float(jnp.max(jnp.abs(y - yr))) / scale < 1e-4
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr), rtol=1e-4, atol=1e-4)
+
+
+def test_flash_xla_custom_vjp_grads():
+    """XLA-level flash (the dry-run path) must match oracle grads exactly."""
+    from repro.kernels.flash_xla import flash_attention_xla
+
+    q = jax.random.normal(k(30), (2, 512, 4, 32))
+    kk = jax.random.normal(k(31), (2, 512, 2, 32))
+    v = jax.random.normal(k(32), (2, 512, 2, 32))
+    for win in (None, 128):
+        f1 = lambda q, kk, v: (flash_attention_xla(q, kk, v, True, win, 0, None, 128) ** 2).sum()
+        f2 = lambda q, kk, v: (ref.attention_reference(q, kk, v, causal=True, window=win) ** 2).sum()
+        g1 = jax.grad(f1, argnums=(0, 1, 2))(q, kk, v)
+        g2 = jax.grad(f2, argnums=(0, 1, 2))(q, kk, v)
+        for a, b in zip(g1, g2):
+            scale = float(jnp.max(jnp.abs(b))) + 1e-9
+            assert float(jnp.max(jnp.abs(a - b))) / scale < 1e-5
+
+
+def test_rglru_xla_custom_vjp_grads():
+    """Chunk-boundary linear-scan VJP must match full-AD grads."""
+    from repro.kernels.rglru_xla import rglru_xla
+
+    B, T, D = 2, 1024, 16
+    x = jax.random.normal(k(33), (B, T, D))
+    ap = jax.random.normal(k(34), (D,))
+    ig = jax.nn.sigmoid(jax.random.normal(k(35), (B, T, D)))
+    ag = jax.nn.sigmoid(jax.random.normal(k(36), (B, T, D)))
+    h0 = jax.random.normal(k(37), (B, D))
+    f1 = lambda *a: (rglru_xla(*a, chunk=256)[0] ** 2).sum()
+    f2 = lambda *a: (ref.rglru_reference(*a)[0] ** 2).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2, 3, 4))(x, ap, ig, ag, h0)
+    g2 = jax.grad(f2, argnums=(0, 1, 2, 3, 4))(x, ap, ig, ag, h0)
+    for a, b in zip(g1, g2):
+        scale = float(jnp.max(jnp.abs(b))) + 1e-9
+        assert float(jnp.max(jnp.abs(a - b))) / scale < 1e-5
+
+
+def test_ssd_chunked_jnp_matches():
+    x = jax.random.normal(k(24), (2, 512, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(k(25), (2, 512, 4)))
+    alog = 0.5 * jax.random.normal(k(26), (4,))
+    bm = 0.3 * jax.random.normal(k(27), (2, 512, 2, 64))
+    cm = 0.3 * jax.random.normal(k(28), (2, 512, 2, 64))
+    y1, h1 = ref.ssd_chunked_reference(x, dt, alog, bm, cm, None, None, chunk=128)
+    y2, h2 = ref.ssd_reference(x, dt, alog, bm, cm, None, None)
+    scale = float(jnp.max(jnp.abs(y2))) + 1e-9
+    assert float(jnp.max(jnp.abs(y1 - y2))) / scale < 1e-4
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-4, atol=1e-4)

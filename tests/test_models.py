@@ -1,0 +1,182 @@
+"""Per-arch smoke tests (reduced configs) + decode/prefill consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (
+    arch_cache_defs,
+    arch_decode_step,
+    arch_forward,
+    arch_init_params,
+    cross_entropy_loss,
+)
+from repro.models.common import init_tree
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b, s):
+    batch = {"tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(KEY, (b, cfg.n_frames, cfg.d_model), jnp.float32)
+    if cfg.n_vis_tokens:
+        batch["vis_embeds"] = jax.random.normal(KEY, (b, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one grad step, shapes + finiteness."""
+    cfg = get_smoke_config(arch)
+    params = arch_init_params(cfg, KEY)
+    b, s = 2, 32
+    batch = _batch(cfg, b, s)
+    logits = arch_forward(cfg, params, batch)
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), "NaN/inf in forward"
+
+    labels = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    def loss_fn(p):
+        return cross_entropy_loss(cfg, arch_forward(cfg, p, batch), labels)
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, "gradients vanished"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_brief(arch):
+    """The full (non-smoke) configs carry the exact dims from the brief."""
+    cfg = get_config(arch)
+    expected = {
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "mamba2-780m": (48, 1536, 0, 0, 0, 50280),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab_size)
+    assert got == expected, f"{arch}: {got} != {expected}"
+    if arch == "mixtral-8x7b":
+        assert (cfg.n_experts, cfg.top_k, cfg.attn_window) == (8, 2, 4096)
+    if arch == "granite-moe-1b-a400m":
+        assert (cfg.n_experts, cfg.top_k) == (32, 8)
+    if arch == "mamba2-780m":
+        assert cfg.ssm_state == 128
+    if arch == "recurrentgemma-2b":
+        assert cfg.layer_pattern == ("rec", "rec", "attn_local")
+
+
+def _fill_whisper_cross(cfg, params, batch, cache):
+    from repro.models.encdec import encdec_encode
+
+    enc = encdec_encode(cfg, params, batch["frames"])
+    cks, cvs = [], []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["dec_layers"])["cross_attn"]
+        kk = jnp.einsum("bse,ehd->bshd", enc, lp["wk"].astype(enc.dtype)) + lp["bk"].astype(enc.dtype)
+        vv = jnp.einsum("bse,ehd->bshd", enc, lp["wv"].astype(enc.dtype)) + lp["bv"].astype(enc.dtype)
+        cks.append(kk)
+        cvs.append(vv)
+    cache["cross_k"] = jnp.stack(cks)
+    cache["cross_v"] = jnp.stack(cvs)
+    return cache
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = arch_init_params(cfg, KEY)
+    b, s = 2, 16
+    batch = _batch(cfg, b, s)
+    # decode consumes tokens only — compare against the token-only forward
+    batch.pop("vis_embeds", None)
+    full = arch_forward(cfg, params, batch)
+    cache = init_tree(arch_cache_defs(cfg, b, max_len=32), KEY)
+    if cfg.encoder_layers:
+        cache = _fill_whisper_cross(cfg, params, batch, cache)
+    worst = 0.0
+    for t in range(s):
+        lg, cache = arch_decode_step(cfg, params, cache, batch["tokens"][:, t : t + 1], jnp.int32(t))
+        worst = max(worst, float(jnp.max(jnp.abs(lg - full[:, t]))))
+    scale = float(jnp.max(jnp.abs(full))) + 1e-9
+    assert worst / scale < 2e-3, f"decode diverges from forward: {worst} (scale {scale})"
+
+
+def test_ring_cache_wraparound():
+    """Sliding-window decode past the window edge stays exact (mixtral-style)."""
+    cfg = get_smoke_config("mixtral-8x7b")
+    assert cfg.attn_window == 64
+    import dataclasses
+    cfg = dataclasses.replace(cfg, attn_window=8)  # tiny window, S >> window
+    params = arch_init_params(cfg, KEY)
+    b, s = 1, 24
+    batch = _batch(cfg, b, s)
+    full = arch_forward(cfg, params, batch)
+    cache = init_tree(arch_cache_defs(cfg, b, max_len=s), KEY)
+    worst = 0.0
+    for t in range(s):
+        lg, cache = arch_decode_step(cfg, params, cache, batch["tokens"][:, t : t + 1], jnp.int32(t))
+        worst = max(worst, float(jnp.max(jnp.abs(lg - full[:, t]))))
+    scale = float(jnp.max(jnp.abs(full))) + 1e-9
+    assert worst / scale < 2e-3, f"ring cache wrong after wraparound: {worst}"
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "mamba2-780m", "recurrentgemma-2b", "whisper-medium"])
+def test_prefill_matches_forward(arch):
+    from repro.runtime import make_prefill_step, make_serve_step
+
+    cfg = get_smoke_config(arch)
+    params = arch_init_params(cfg, KEY)
+    b, s = 2, 16
+    batch = _batch(cfg, b, s)
+    full = arch_forward(cfg, params, batch)
+    last, cache = make_prefill_step(cfg, max_len=32)(params, batch)
+    scale = float(jnp.max(jnp.abs(full))) + 1e-9
+    assert float(jnp.max(jnp.abs(last - full[:, -1]))) / scale < 2e-3
+    # continue decoding from the prefilled cache: the next step's *logits*
+    # must match a fresh decode pass that replayed the whole prompt
+    # (token-level argmax equality is tie-fragile at smoke scale)
+    nxt_tok = batch["tokens"][:, -1:]  # stand-in continuation token
+    lg_cont, cache = arch_decode_step(cfg, params, cache, nxt_tok, jnp.int32(s))
+
+    cache2 = init_tree(arch_cache_defs(cfg, b, max_len=32), KEY)
+    if cfg.encoder_layers:
+        cache2 = _fill_whisper_cross(cfg, params, batch, cache2)
+    for t in range(s):
+        _, cache2 = arch_decode_step(cfg, params, cache2, batch["tokens"][:, t : t + 1], jnp.int32(t))
+    lg2_cont, _ = arch_decode_step(cfg, params, cache2, nxt_tok, jnp.int32(s))
+    rel = float(jnp.max(jnp.abs(lg_cont - lg2_cont))) / (float(jnp.max(jnp.abs(lg2_cont))) + 1e-9)
+    assert rel < 2e-3, f"prefilled-cache continuation diverges: {rel}"
+
+    serve = make_serve_step(cfg)
+    nxt, _ = serve(params, cache, nxt_tok, jnp.int32(s + 1), KEY)
+    assert nxt.shape == (b, 1)
+
+
+def test_cross_entropy_masks_padded_vocab():
+    cfg = get_smoke_config("qwen2.5-14b")
+    b, s = 2, 8
+    logits = jnp.zeros((b, s, cfg.padded_vocab))
+    # huge logit in the padded region must not affect the loss
+    logits = logits.at[..., cfg.vocab_size + 3].set(100.0)
+    labels = jnp.zeros((b, s), jnp.int32)
+    loss = cross_entropy_loss(cfg, logits, labels, z_loss=0.0)
+    assert abs(float(loss) - float(jnp.log(jnp.asarray(float(cfg.vocab_size))))) < 1e-3
+
+
+def test_param_count_sanity():
+    """Analytic 6ND param counts are within 10% of actual param sizes."""
+    for arch in ("qwen2.5-14b", "mixtral-8x7b", "mamba2-780m"):
+        cfg = get_smoke_config(arch)
+        params = arch_init_params(cfg, KEY)
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.10, (arch, actual, analytic)
