@@ -6,21 +6,18 @@ Table V/Fig4 — improvement vs DSP core count (rises to a peak, decays to 0).
 Fig 3      — stability across 20 seeded runs.
 Figs 5/6   — mixed-evaluation K sweep (U-shaped makespan).
 Fig 7      — fast-memory ratio sweep, TS vs LB.
+portfolio  — the anytime portfolio vs every single method (API redesign win).
+
+All drivers speak the unified ``repro.solve`` API.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
 
-from repro.core import (
-    TSParams,
-    construct_greedy,
-    exact_schedule,
-    load_balance,
-    memory_update,
-    tabu_search,
-)
+from repro.core import Budget, solve
 
 from .common import Scale, emit, save_json
 
@@ -33,10 +30,8 @@ def table3_init_strategies(sc: Scale) -> dict:
         row = {"instance": f"randomCaseA{i+1}"}
         for s in strategies:
             t0 = time.monotonic()
-            init = construct_greedy(inst, s, rng=i)
-            s0 = exact_schedule(inst, memory_update(inst, init)).makespan
-            res = tabu_search(inst, init, sc.ts)
-            row[s] = {"S0": s0, "S*": res.best_makespan,
+            res = solve(inst, "tabu", params=sc.ts, init=s, seed=i)
+            row[s] = {"S0": res.initial_makespan, "S*": res.makespan,
                       "iters": res.iterations, "sec": round(time.monotonic() - t0, 1)}
         rows.append(row)
     means = {s: float(np.mean([r[s]["S*"] for r in rows])) for s in strategies}
@@ -56,13 +51,12 @@ def table4_ts_vs_lb(sc: Scale) -> dict:
                 inst = sc.instance(
                     200 + i, n_fast_cores=2, n_slow_cores=n_slow, fast_mem_fraction=mem_frac,
                 )
-                lb = load_balance(inst)
-                lb_mk = exact_schedule(inst, lb).makespan
-                res = tabu_search(inst, construct_greedy(inst, "slack_first"), sc.ts)
+                lb_mk = solve(inst, "load_balance").makespan
+                res = solve(inst, "tabu", params=sc.ts, init="slack_first")
                 rows.append({
                     "instance": f"randomCaseB{i+1}", "memory": mem_name,
-                    "cores": f"H:2/L:{n_slow}", "LB": lb_mk, "TS": res.best_makespan,
-                    "ratio": 1 - res.best_makespan / lb_mk,
+                    "cores": f"H:2/L:{n_slow}", "LB": lb_mk, "TS": res.makespan,
+                    "ratio": 1 - res.makespan / lb_mk,
                 })
     ratios = [r["ratio"] for r in rows]
     out = {"rows": rows, "mean_improvement": float(np.mean(ratios)),
@@ -79,11 +73,11 @@ def table5_core_sweep(sc: Scale, counts=(2, 4, 6, 8, 12, 16, 20, 28, 36, 44)) ->
     for i in range(max(1, sc.n_instances // 2)):
         for n_slow in counts:
             inst = sc.instance(300 + i, n_fast_cores=2, n_slow_cores=n_slow)
-            lb_mk = exact_schedule(inst, load_balance(inst)).makespan
-            res = tabu_search(inst, construct_greedy(inst, "slack_first"), sc.ts)
+            lb_mk = solve(inst, "load_balance").makespan
+            res = solve(inst, "tabu", params=sc.ts, init="slack_first")
             rows.append({"instance": f"randomCaseD{i+1}", "cores": n_slow,
-                         "LB": lb_mk, "TS": res.best_makespan,
-                         "imp": 1 - res.best_makespan / lb_mk})
+                         "LB": lb_mk, "TS": res.makespan,
+                         "imp": 1 - res.makespan / lb_mk})
     by_cores = {c: float(np.mean([r["imp"] for r in rows if r["cores"] == c])) for c in counts}
     peak = max(by_cores, key=by_cores.get)
     tail = by_cores[counts[-1]]
@@ -101,10 +95,8 @@ def fig3_stability(sc: Scale, n_runs: int = 20) -> dict:
         inst = sc.instance(400 + i)
         finals = []
         for r in range(n_runs):
-            init = construct_greedy(inst, "random", rng=r)
-            ts = TSParams(**{**sc.ts.__dict__, "seed": r})
-            res = tabu_search(inst, init, ts)
-            finals.append(res.best_makespan)
+            res = solve(inst, "tabu", params=sc.ts, init="random", seed=r)
+            finals.append(res.makespan)
         rows.append({
             "instance": f"randomCaseC{i+1}",
             "min": float(np.min(finals)), "max": float(np.max(finals)),
@@ -123,11 +115,10 @@ def fig56_mixed_eval(sc: Scale, ks=(1, 3, 5, 10, 20, 40, 80)) -> dict:
     budget = max(2.0, sc.ts.time_limit / 2)
     for i in range(max(1, sc.n_instances // 2)):
         inst = sc.instance(500 + i)
-        init = construct_greedy(inst, "slack_first")
         for k in ks:
-            ts = TSParams(**{**sc.ts.__dict__, "top_k": k, "time_limit": budget})
-            res = tabu_search(inst, init, ts)
-            rows.append({"instance": i, "K": k, "makespan": res.best_makespan,
+            res = solve(inst, "tabu", params=dataclasses.replace(sc.ts, top_k=k),
+                        budget=Budget(time_limit=budget), init="slack_first")
+            rows.append({"instance": i, "K": k, "makespan": res.makespan,
                          "iters": res.iterations,
                          "exact_per_iter": res.n_exact_evals / max(1, res.iterations)})
     by_k = {k: float(np.mean([r["makespan"] for r in rows if r["K"] == k])) for k in ks}
@@ -145,9 +136,9 @@ def fig7_memory_ratio(sc: Scale, fracs=(0.0, 0.02, 0.05, 0.08, 0.12, 0.16, 0.2))
     inst_seed = 600
     for frac in fracs:
         inst = sc.instance(inst_seed, fast_mem_fraction=max(frac, 1e-9))
-        lb_mk = exact_schedule(inst, load_balance(inst)).makespan
-        res = tabu_search(inst, construct_greedy(inst, "slack_first"), sc.ts)
-        rows.append({"frac": frac, "LB": lb_mk, "TS": res.best_makespan})
+        lb_mk = solve(inst, "load_balance").makespan
+        res = solve(inst, "tabu", params=sc.ts, init="slack_first")
+        rows.append({"frac": frac, "LB": lb_mk, "TS": res.makespan})
     ts0 = rows[0]["TS"]
     lb_hi = rows[-1]["LB"]
     out = {"rows": rows,
@@ -156,4 +147,28 @@ def fig7_memory_ratio(sc: Scale, fracs=(0.0, 0.02, 0.05, 0.08, 0.12, 0.16, 0.2))
     emit("fig7_memory_ratio", 0.0,
          f"TS@0% fast = {ts0:.0f} vs LB@20% fast = {lb_hi:.0f} "
          f"(ratio {ts0/lb_hi:.3f}; paper: TS low-speed ≲ LB high-speed)")
+    return out
+
+
+def portfolio_vs_single(sc: Scale) -> dict:
+    """The anytime portfolio under one shared budget vs each single method
+    given that same whole budget — the scenario-diversity win of the unified
+    API (no per-solver plumbing required)."""
+    budget = Budget(time_limit=sc.ts.time_limit)
+    singles = ("greedy:slack_first", "greedy:relax_r", "load_balance", "tabu")
+    rows = []
+    for i in range(sc.n_instances):
+        inst = sc.instance(700 + i)
+        row = {"instance": f"randomCaseP{i+1}"}
+        for m in singles:
+            row[m] = solve(inst, m, budget=budget, params=sc.ts).makespan
+        rep = solve(inst, "portfolio", budget=budget, params=sc.ts)
+        row["portfolio"] = rep.makespan
+        row["winner"] = rep.extras["winner"]
+        rows.append(row)
+    mean = {m: float(np.mean([r[m] for r in rows])) for m in singles + ("portfolio",)}
+    out = {"rows": rows, "mean_makespan": mean}
+    save_json("portfolio_vs_single", out)
+    emit("portfolio_vs_single", 0.0,
+         "mean makespans " + " ".join(f"{k}:{v:.0f}" for k, v in mean.items()))
     return out

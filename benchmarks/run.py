@@ -18,7 +18,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale instances/budgets")
     ap.add_argument("--only", default=None,
-                    help="substring filter: table3|table4|table5|fig3|fig56|fig7|kernel|planner")
+                    help="substring filter: table3|table4|table5|fig3|fig56|fig7|portfolio|kernel|planner")
     args = ap.parse_args()
     sc = scale(args.full)
 
@@ -29,6 +29,7 @@ def main() -> None:
         ("fig3", lambda: paper_tables.fig3_stability(sc, n_runs=20 if args.full else 8)),
         ("fig56", lambda: paper_tables.fig56_mixed_eval(sc)),
         ("fig7", lambda: paper_tables.fig7_memory_ratio(sc)),
+        ("portfolio", lambda: paper_tables.portfolio_vs_single(sc)),
         ("kernel", kernel_bench.main),
         ("planner", planner_tpu.main),
     ]

@@ -10,20 +10,24 @@
 """
 import numpy as np
 
-from repro.core import (TSParams, construct_greedy, exact_schedule,
-                        load_balance, random_instance, tabu_search)
+from repro import Budget, solve
+from repro.core import TSParams, random_instance
 from repro.configs.base import SHAPE_CELLS
 from repro.configs.registry import get_config
 from repro.plan import plan_pipeline, plan_residency, plan_residency_lb
 
 # --- 1. paper-style instance ------------------------------------------------
 inst = random_instance(7, n_tasks=80, n_data=200)
-lb = load_balance(inst)
-lb_mk = exact_schedule(inst, lb).makespan
-res = tabu_search(inst, construct_greedy(inst, "slack_first"),
-                  TSParams(max_unimproved=80, time_limit=10, top_k=8))
+lb_mk = solve(inst, "load_balance").makespan
+res = solve(inst, "tabu", params=TSParams(max_unimproved=80, top_k=8),
+            budget=Budget(time_limit=10))
 print(f"[paper instance] LB {lb_mk:.0f} | greedy {res.initial_makespan:.0f} | "
-      f"TS {res.best_makespan:.0f}  (TS beats LB by {100*(1-res.best_makespan/lb_mk):.1f}%)")
+      f"TS {res.makespan:.0f}  (TS beats LB by {100*(1-res.makespan/lb_mk):.1f}%)")
+
+# the same budget spent across ALL solvers at once (anytime portfolio)
+port = solve(inst, "portfolio", budget=Budget(time_limit=10))
+print(f"[paper instance] portfolio {port.makespan:.0f} "
+      f"(winner: {port.extras['winner']})")
 
 # --- 2. the same algorithms on the llama3-405b training step ----------------
 cfg = get_config("llama3-405b")

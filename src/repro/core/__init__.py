@@ -4,7 +4,15 @@ Data allocation + task scheduling on heterogeneous multiprocessor systems
 under memory constraints (Ding et al., 2022): MDFG instances, exact/approx
 schedule evaluation, greedy construction (Alg. 1), tabu search (Alg. 2),
 memory update (Alg. 3), the load-balancing baseline, and the ILP model.
+
+The supported solver surface is :func:`repro.solve` (see ``core/api.py``);
+the historical free functions (``tabu_search``, ``construct_greedy``,
+``load_balance``, ``brute_force_optimum``) remain importable from here but
+emit ``DeprecationWarning``.
 """
+import functools
+import warnings
+
 from .mdfg import Instance, random_instance, validate_instance
 from .solution import (
     Schedule,
@@ -16,11 +24,24 @@ from .solution import (
     memory_feasible,
     memory_peaks,
 )
-from .greedy import STRATEGIES, construct_greedy
-from .load_balance import load_balance
+from .greedy import STRATEGIES
+from .greedy import construct_greedy as _construct_greedy
+from .load_balance import load_balance as _load_balance
 from .memory_update import memory_update
-from .tabu import Move, TSParams, TSResult, apply_move, critical_blocks, tabu_search
-from .ilp import brute_force_optimum, build_ilp
+from .tabu import Move, TSEvent, TSParams, TSResult, apply_move, critical_blocks
+from .tabu import tabu_search as _tabu_search
+from .ilp import build_ilp
+from .ilp import brute_force_optimum as _brute_force_optimum
+from .api import (
+    Budget,
+    Callbacks,
+    SolveReport,
+    Solver,
+    get_solver,
+    list_solvers,
+    register_solver,
+    solve,
+)
 
 __all__ = [
     "Instance",
@@ -39,6 +60,7 @@ __all__ = [
     "load_balance",
     "memory_update",
     "Move",
+    "TSEvent",
     "TSParams",
     "TSResult",
     "apply_move",
@@ -46,4 +68,38 @@ __all__ = [
     "tabu_search",
     "brute_force_optimum",
     "build_ilp",
+    "Budget",
+    "Callbacks",
+    "SolveReport",
+    "Solver",
+    "solve",
+    "register_solver",
+    "get_solver",
+    "list_solvers",
 ]
+
+
+def _deprecated_entry_point(fn, name: str, method_hint: str):
+    """Legacy solver entry points keep working but point at repro.solve."""
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"repro.core.{name} is deprecated; use "
+            f"repro.solve(instance, method={method_hint!r}, ...) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return fn(*args, **kwargs)
+
+    return wrapper
+
+
+construct_greedy = _deprecated_entry_point(
+    _construct_greedy, "construct_greedy", "greedy:slack_first"
+)
+load_balance = _deprecated_entry_point(_load_balance, "load_balance", "load_balance")
+tabu_search = _deprecated_entry_point(_tabu_search, "tabu_search", "tabu")
+brute_force_optimum = _deprecated_entry_point(
+    _brute_force_optimum, "brute_force_optimum", "ilp_brute_force"
+)

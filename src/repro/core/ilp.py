@@ -13,6 +13,7 @@ No MILP solver ships in this container, so this module serves two purposes:
 from __future__ import annotations
 
 import itertools
+import time
 
 import numpy as np
 
@@ -129,11 +130,27 @@ def _orders(inst: Instance) -> list[list[int]]:
     return orders
 
 
-def brute_force_optimum(inst: Instance, max_tasks: int = 7) -> tuple[float, Solution]:
-    """Provable optimum by exhaustive enumeration (micro instances)."""
+def brute_force_optimum(
+    inst: Instance,
+    max_tasks: int = 7,
+    *,
+    time_limit: float | None = None,
+    max_evals: int | None = None,
+    stats: dict | None = None,
+) -> tuple[float, Solution]:
+    """Provable optimum by exhaustive enumeration (micro instances).
+
+    ``time_limit`` / ``max_evals`` bound the enumeration; when either trips,
+    the best incumbent found so far is returned and ``stats["exhaustive"]``
+    is False (so the result is an upper bound, not a certified optimum).
+    ``stats``, when given, also receives ``n_evals``.
+    """
     if inst.n_tasks > max_tasks:
         raise ValueError("brute force limited to micro instances")
+    t0 = time.monotonic()
     best_mk, best_sol = np.inf, None
+    n_evals = 0
+    exhausted_budget = False
     proc_choices = [list(inst.compatible_procs(i)) for i in range(inst.n_tasks)]
     mem_choices = [list(inst.compatible_mems(d)) for d in range(inst.n_data)]
     orders = _orders(inst)
@@ -144,13 +161,31 @@ def brute_force_optimum(inst: Instance, max_tasks: int = 7) -> tuple[float, Solu
             for t in order:
                 seqs[assign_arr[t]].append(t)
             for mems in itertools.product(*mem_choices):
+                if (max_evals is not None and n_evals >= max_evals) or (
+                    time_limit is not None and time.monotonic() - t0 > time_limit
+                ):
+                    exhausted_budget = True
+                    break
                 sol = Solution(assign=assign_arr.copy(),
                                mem=np.array(mems, dtype=np.int64),
                                proc_seq=[list(s) for s in seqs])
                 sched = exact_schedule(inst, sol)
+                n_evals += 1
                 if sched is None:
                     continue
                 if sched.makespan < best_mk and memory_feasible(inst, sol, sched):
                     best_mk, best_sol = sched.makespan, sol
-    assert best_sol is not None
+            if exhausted_budget:
+                break
+        if exhausted_budget:
+            break
+    if stats is not None:
+        stats["n_evals"] = n_evals
+        stats["exhaustive"] = not exhausted_budget
+        stats["elapsed"] = time.monotonic() - t0
+    if best_sol is None:
+        raise RuntimeError(
+            "brute force found no feasible solution"
+            + (" within the budget" if exhausted_budget else "")
+        )
     return best_mk, best_sol

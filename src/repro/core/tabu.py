@@ -22,7 +22,7 @@ from .mdfg import Instance
 from .memory_update import memory_update
 from .solution import Solution, durations, exact_schedule, heads_tails
 
-__all__ = ["TSParams", "TSResult", "tabu_search", "critical_blocks", "Move"]
+__all__ = ["TSParams", "TSResult", "TSEvent", "tabu_search", "critical_blocks", "Move"]
 
 _WINDOW = 12  # approximate-evaluation look-ahead window (ops)
 
@@ -37,6 +37,15 @@ class TSParams:
     n_change_core_positions: int = 5   # insertion positions probed per target core
     perturbation_size: int = 4
     seed: int = 0
+    max_iters: int | None = None       # hard cap on outer iterations
+    max_evals: int | None = None       # hard cap on exact schedule evaluations
+
+    @classmethod
+    def fast(cls, seed: int = 0) -> "TSParams":
+        """Smoke-test profile: finishes in ~a second on Table-II-scale
+        instances while still improving the greedy init."""
+        return cls(max_unimproved=30, time_limit=2.0, top_k=4,
+                   max_iters=400, seed=seed)
 
 
 @dataclasses.dataclass
@@ -49,6 +58,20 @@ class TSResult:
     history: list[tuple[int, float]]
     n_exact_evals: int = 0
     n_approx_evals: int = 0
+    stop_reason: str = "converged"
+
+
+@dataclasses.dataclass(frozen=True)
+class TSEvent:
+    """Snapshot handed to ``on_iteration`` / ``on_improvement`` callbacks."""
+
+    iteration: int
+    best_makespan: float
+    current_makespan: float
+    elapsed: float
+    n_exact_evals: int
+    n_approx_evals: int
+    improved: bool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,7 +232,14 @@ def tabu_search(
     inst: Instance,
     init: Solution,
     params: TSParams | None = None,
+    *,
+    on_iteration=None,
+    on_improvement=None,
 ) -> TSResult:
+    """Algorithm 2.  ``on_iteration(event)`` fires once per outer iteration and
+    ``on_improvement(event)`` whenever the incumbent improves; either callback
+    may return a truthy value to stop the search (``stop_reason="callback"``).
+    """
     params = params or TSParams()
     rng = np.random.default_rng(params.seed)
     t0 = time.monotonic()
@@ -229,9 +259,31 @@ def tabu_search(
     unimproved = 0
     n_exact = n_approx = 0
     accepted = 0
+    stop_reason = "converged"
+
+    def _fire(cb, improved: bool, cur_mk: float) -> bool:
+        if cb is None:
+            return False
+        event = TSEvent(
+            iteration=it,
+            best_makespan=best_mk,
+            current_makespan=cur_mk,
+            elapsed=time.monotonic() - t0,
+            n_exact_evals=n_exact,
+            n_approx_evals=n_approx,
+            improved=improved,
+        )
+        return bool(cb(event))
 
     while unimproved < params.max_unimproved:
         if time.monotonic() - t0 > params.time_limit:
+            stop_reason = "time_limit"
+            break
+        if params.max_iters is not None and it >= params.max_iters:
+            stop_reason = "max_iters"
+            break
+        if params.max_evals is not None and n_exact >= params.max_evals:
+            stop_reason = "max_evals"
             break
         it += 1
         r, q, _, crit = heads_tails(inst, cur, sched)
@@ -268,6 +320,10 @@ def tabu_search(
         for est, m in scored:
             if examined >= params.top_k and chosen is not None:
                 break
+            # re-check mid-iteration: a round where nothing is accepted would
+            # otherwise exact-evaluate the whole neighborhood past the cap
+            if params.max_evals is not None and n_exact >= params.max_evals:
+                break
             cfg = resulting_config(m)
             is_tabu = tabu.get(cfg, -1) >= it
             if is_tabu and est >= best_mk:
@@ -284,6 +340,9 @@ def tabu_search(
             if s.makespan < chosen_mk:
                 chosen, chosen_sched, chosen_mk = (m, cand), s, s.makespan
 
+        if chosen is None and params.max_evals is not None and n_exact >= params.max_evals:
+            stop_reason = "max_evals"
+            break
         if chosen is None:
             # all admissible moves tabu/cyclic → random perturbation (line 11)
             for _ in range(params.perturbation_size):
@@ -308,9 +367,13 @@ def tabu_search(
                 except AssertionError:
                     continue
                 s = exact_schedule(inst, cand)
+                n_exact += 1
                 if s is not None:
                     cur, sched = cand, s
             unimproved += 1
+            if _fire(on_iteration, False, sched.makespan):
+                stop_reason = "callback"
+                break
             continue
 
         m, cand = chosen
@@ -327,16 +390,26 @@ def tabu_search(
         accepted += 1
         if accepted % params.mem_update_period == 0:
             cur = memory_update(inst, cur, refresh_every=params.mem_refresh_every)
-        sched = exact_schedule(inst, cur)
-        assert sched is not None
+            sched = exact_schedule(inst, cur)
+            n_exact += 1
+            assert sched is not None
+        else:
+            sched = chosen_sched  # cand unchanged since its candidate eval
 
-        if sched.makespan < best_mk - 1e-9:
+        improved = sched.makespan < best_mk - 1e-9
+        if improved:
             best = cur.copy()
             best_mk = sched.makespan
             history.append((it, best_mk))
             unimproved = 0
         else:
             unimproved += 1
+        if improved and _fire(on_improvement, True, sched.makespan):
+            stop_reason = "callback"
+            break
+        if _fire(on_iteration, improved, sched.makespan):
+            stop_reason = "callback"
+            break
 
     return TSResult(
         best=best,
@@ -347,4 +420,5 @@ def tabu_search(
         history=history,
         n_exact_evals=n_exact,
         n_approx_evals=n_approx,
+        stop_reason=stop_reason,
     )

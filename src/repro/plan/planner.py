@@ -16,14 +16,7 @@ import dataclasses
 import numpy as np
 
 from ..configs.base import ModelConfig, ShapeCell
-from ..core import (
-    TSParams,
-    construct_greedy,
-    exact_schedule,
-    load_balance,
-    memory_update,
-    tabu_search,
-)
+from ..core import TSParams, solve
 from .extract import MEM_HBM, MEM_HOST, MEM_REMAT, pipeline_instance, residency_instance
 
 __all__ = ["ResidencyPlan", "plan_residency", "plan_residency_lb", "plan_pipeline"]
@@ -114,15 +107,11 @@ def plan_residency(
             n_data_shards=n_data_shards, n_model_shards=n_model_shards,
             optimizer=optimizer,
         )
-        init = construct_greedy(inst, "slack_first")
         if use_tabu and inst.n_tasks > 2:
-            res = tabu_search(inst, init, ts_params)
-            sol, mk = res.best, res.best_makespan
+            res = solve(inst, "tabu", params=ts_params, init="slack_first")
         else:
-            sol = memory_update(inst, init)
-            sched = exact_schedule(inst, sol)
-            assert sched is not None
-            mk = sched.makespan
+            res = solve(inst, "greedy:slack_first", refine_memory=True)
+        sol, mk = res.solution, res.makespan
         plan = _project_plan(inst, meta, sol, mk, cfg, cell, g, "tabu" if use_tabu else "greedy")
         if best is None or plan.est_step_time < best.est_step_time:
             best = plan
@@ -147,10 +136,8 @@ def plan_residency_lb(
             n_data_shards=n_data_shards, n_model_shards=n_model_shards,
             optimizer=optimizer,
         )
-        sol = load_balance(inst)
-        sched = exact_schedule(inst, sol)
-        assert sched is not None
-        plan = _project_plan(inst, meta, sol, sched.makespan, cfg, cell, g, "lb")
+        res = solve(inst, "load_balance")
+        plan = _project_plan(inst, meta, res.solution, res.makespan, cfg, cell, g, "lb")
         if best is None or plan.est_step_time < best.est_step_time:
             best = plan
     assert best is not None
@@ -175,28 +162,23 @@ def plan_pipeline(
         cfg, cell, n_stages=n_stages, n_microbatches=n_microbatches,
         stage_speed=stage_speed,
     )
-    lb_sol = load_balance(inst)
-    lb_sched = exact_schedule(inst, lb_sol)
-    assert lb_sched is not None
-    greedy_init = construct_greedy(inst, "slack_first")
+    lb_res = solve(inst, "load_balance")
     if use_tabu:
         # multi-start tabu: a better init does not imply a better final
         # schedule (the LB basin can trap the search), so run from both the
         # greedy and the LB order and keep the better result
         tp = ts_params or TSParams(max_unimproved=80, time_limit=8.0, top_k=6)
         best_res = None
-        for init in (greedy_init, lb_sol):
-            res = tabu_search(inst, init, tp)
-            if best_res is None or res.best_makespan < best_res.best_makespan:
+        for init in ("slack_first", lb_res.solution):
+            res = solve(inst, "tabu", params=tp, init=init)
+            if best_res is None or res.makespan < best_res.makespan:
                 best_res = res
-        sol, mk = best_res.best, best_res.best_makespan
+        sol, mk = best_res.solution, best_res.makespan
     else:
-        sol = memory_update(inst, greedy_init)
-        sched = exact_schedule(inst, sol)
-        assert sched is not None
-        mk = sched.makespan
-        if lb_sched.makespan < mk:
-            sol, mk = lb_sol, lb_sched.makespan
+        res = solve(inst, "greedy:slack_first", refine_memory=True)
+        sol, mk = res.solution, res.makespan
+        if lb_res.makespan < mk:
+            sol, mk = lb_res.solution, lb_res.makespan
     # per-stage microbatch order of forward tasks (the schedule artifact)
     S, M = meta["n_stages"], meta["n_microbatches"]
     order = []
@@ -209,7 +191,7 @@ def plan_pipeline(
         "microbatch_order": order,
         "stash_offloaded": n_host,
         "est_step_time": mk * meta["time_unit"],
-        "lb_step_time": lb_sched.makespan * meta["time_unit"],
+        "lb_step_time": lb_res.makespan * meta["time_unit"],
         "n_stages": n_stages,
         "n_microbatches": n_microbatches,
     }

@@ -1,0 +1,260 @@
+"""The unified solver surface: registry, budgets, callbacks, portfolio,
+legacy-parity, and deprecation shims."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro
+from repro import Budget, Callbacks, SolveReport, get_solver, list_solvers, solve
+from repro.core import TSParams, random_instance
+from repro.core import api as api_mod
+from repro.core.greedy import STRATEGIES, construct_greedy
+from repro.core.ilp import brute_force_optimum
+from repro.core.load_balance import load_balance
+from repro.core.solution import exact_schedule
+from repro.core.tabu import tabu_search
+
+
+def small_instance(seed=0, **kw):
+    kw.setdefault("n_tasks", 40)
+    kw.setdefault("n_data", 100)
+    return random_instance(seed, **kw)
+
+
+def micro_instance():
+    return random_instance(
+        42, n_tasks=4, n_data=5, n_fast_cores=1, n_slow_cores=1,
+        edges_per_task=2.0, n_fast_tiers=1, core_restrict_prob=0.0,
+    )
+
+
+FAST = TSParams.fast()
+
+
+# --------------------------------------------------------------------------- #
+# registry                                                                     #
+# --------------------------------------------------------------------------- #
+def test_registry_lists_all_paper_solvers():
+    names = list_solvers()
+    for s in STRATEGIES:
+        assert f"greedy:{s}" in names
+    for m in ("load_balance", "tabu", "ilp_brute_force", "portfolio"):
+        assert m in names
+
+
+def test_registry_roundtrip_and_duplicate_rejection():
+    @repro.register_solver("test:constant")
+    def _constant(inst, *, budget, seed, callbacks, **kw):
+        rep = solve(inst, "load_balance", budget=budget, seed=seed)
+        return dataclasses.replace(rep, method="test:constant")
+
+    try:
+        assert get_solver("test:constant") is _constant
+        assert "test:constant" in list_solvers()
+        rep = solve(small_instance(), "test:constant")
+        assert rep.method == "test:constant" and rep.feasible
+        with pytest.raises(ValueError, match="already registered"):
+            repro.register_solver("test:constant", _constant)
+    finally:
+        api_mod._REGISTRY.pop("test:constant", None)
+
+
+def test_unknown_method_names_the_registered_ones():
+    with pytest.raises(KeyError, match="tabu"):
+        solve(small_instance(), "no_such_solver")
+
+
+# --------------------------------------------------------------------------- #
+# every method returns a well-formed SolveReport                               #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("method", [f"greedy:{s}" for s in STRATEGIES]
+                         + ["load_balance", "tabu", "portfolio"])
+def test_every_method_returns_report(method):
+    inst = small_instance(1)
+    # constructive adapters tolerate search-only kwargs, so one uniform call
+    # works across the whole registry
+    rep = solve(inst, method, budget=Budget.smoke(), seed=0, params=FAST)
+    assert isinstance(rep, SolveReport)
+    assert rep.method == method
+    assert rep.feasible
+    assert np.isfinite(rep.makespan) and rep.makespan > 0
+    assert rep.makespan <= rep.initial_makespan + 1e-9
+    assert rep.wall_time >= 0 and rep.iterations >= 1 and rep.n_exact_evals >= 1
+    assert rep.history and rep.history[-1][1] <= rep.history[0][1] + 1e-9
+    sched = exact_schedule(inst, rep.solution)
+    assert np.isclose(sched.makespan, rep.makespan, rtol=1e-9)
+
+
+def test_ilp_brute_force_report_on_micro():
+    rep = solve(micro_instance(), "ilp_brute_force")
+    assert rep.feasible and rep.extras["exhaustive"]
+    assert rep.stop_reason == "completed"
+
+
+# --------------------------------------------------------------------------- #
+# parity with the legacy free functions on fixed seeds                         #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_greedy_parity_with_legacy(strategy):
+    inst = small_instance(2)
+    legacy = exact_schedule(inst, construct_greedy(inst, strategy, rng=5)).makespan
+    rep = solve(inst, f"greedy:{strategy}", seed=5)
+    assert np.isclose(rep.makespan, legacy, rtol=1e-12)
+
+
+def test_load_balance_parity_with_legacy():
+    inst = small_instance(3)
+    legacy = exact_schedule(inst, load_balance(inst, rng=0)).makespan
+    assert np.isclose(solve(inst, "load_balance").makespan, legacy, rtol=1e-12)
+
+
+def test_tabu_parity_with_legacy():
+    inst = small_instance(4)
+    params = TSParams(max_unimproved=25, time_limit=30.0, top_k=4, seed=3)
+    legacy = tabu_search(inst, construct_greedy(inst, "slack_first", rng=3), params)
+    rep = solve(inst, "tabu", params=params, seed=3)
+    assert np.isclose(rep.makespan, legacy.best_makespan, rtol=1e-12)
+    assert rep.iterations == legacy.iterations
+    assert np.isclose(rep.initial_makespan, legacy.initial_makespan, rtol=1e-12)
+
+
+def test_brute_force_parity_with_legacy():
+    inst = micro_instance()
+    mk, _ = brute_force_optimum(inst)
+    assert np.isclose(solve(inst, "ilp_brute_force").makespan, mk, rtol=1e-12)
+
+
+def test_params_seed_respected_when_solve_seed_omitted():
+    """solve() must not silently override an explicit TSParams.seed."""
+    inst = small_instance(14)
+    params = TSParams(max_unimproved=25, time_limit=30.0, top_k=4, seed=11)
+    legacy = tabu_search(inst, construct_greedy(inst, "slack_first", rng=11), params)
+    rep = solve(inst, "tabu", params=params)  # no seed= given
+    assert np.isclose(rep.makespan, legacy.best_makespan, rtol=1e-12)
+    assert rep.iterations == legacy.iterations
+
+
+# --------------------------------------------------------------------------- #
+# budget enforcement                                                           #
+# --------------------------------------------------------------------------- #
+def test_budget_wall_time_stops_tabu():
+    inst = small_instance(5, n_tasks=60, n_data=150)
+    rep = solve(inst, "tabu", budget=Budget(time_limit=0.5),
+                params=TSParams(max_unimproved=10**9, top_k=10))
+    assert rep.stop_reason == "time_limit"
+    assert rep.wall_time < 5.0
+
+
+def test_budget_iteration_cap_stops_tabu():
+    inst = small_instance(6)
+    rep = solve(inst, "tabu", budget=Budget(max_iters=5),
+                params=TSParams(max_unimproved=10**9, time_limit=60.0))
+    assert rep.iterations <= 5
+    assert rep.stop_reason == "max_iters"
+
+
+def test_budget_eval_cap_stops_tabu():
+    inst = small_instance(7)
+    rep = solve(inst, "tabu", budget=Budget(max_evals=30),
+                params=TSParams(max_unimproved=10**9, time_limit=60.0))
+    # the cap is re-checked inside the candidate loop, so overshoot is at
+    # most one post-acceptance re-schedule or an all-tabu round's few
+    # perturbation evals
+    assert rep.n_exact_evals <= 30 + TSParams().perturbation_size + 1
+    assert rep.stop_reason == "max_evals"
+
+
+def test_budget_eval_cap_bounds_portfolio_total():
+    """The portfolio deducts evals already spent before funding later legs."""
+    inst = small_instance(10)
+    rep = solve(inst, "portfolio", budget=Budget(max_evals=100), params=FAST)
+    # constructive legs (1 eval each) + tabu legs funded from the remainder;
+    # allow each leg's bounded overshoot (perturbation round or acceptance)
+    assert rep.n_exact_evals <= 100 + 2 * (TSParams().perturbation_size + 1)
+
+
+def test_budget_eval_cap_stops_brute_force():
+    rep = solve(micro_instance(), "ilp_brute_force", budget=Budget(max_evals=40))
+    assert rep.n_exact_evals <= 40
+    assert not rep.extras["exhaustive"]
+    assert rep.stop_reason == "budget"
+    assert rep.feasible  # still returns a usable incumbent
+
+
+def test_budget_split():
+    b = Budget(time_limit=10.0, max_iters=100, max_evals=1000)
+    s = b.split(4)
+    assert s.time_limit == 2.5 and s.max_iters == 25 and s.max_evals == 250
+    assert Budget().split(3) == Budget()
+
+
+# --------------------------------------------------------------------------- #
+# callbacks                                                                    #
+# --------------------------------------------------------------------------- #
+def test_on_iteration_early_stop():
+    inst = small_instance(8)
+    seen = []
+    cb = Callbacks(on_iteration=lambda ev: seen.append(ev) or len(seen) >= 4)
+    rep = solve(inst, "tabu", callbacks=cb,
+                params=TSParams(max_unimproved=10**9, time_limit=60.0))
+    assert rep.stop_reason == "callback"
+    assert len(seen) == 4
+    assert all(ev.iteration <= 4 for ev in seen)
+    assert seen[-1].elapsed >= 0 and seen[-1].n_exact_evals > 0
+
+
+def test_on_improvement_trace_is_monotone():
+    inst = small_instance(9)
+    trace = []
+    cb = Callbacks(on_improvement=lambda ev: trace.append(ev.best_makespan))
+    rep = solve(inst, "tabu", callbacks=cb, params=FAST)
+    # every improvement strictly lowers the incumbent
+    assert all(b < a - 1e-12 for a, b in zip(trace, trace[1:]))
+    if trace:
+        assert np.isclose(trace[-1], rep.makespan, rtol=1e-9)
+
+
+# --------------------------------------------------------------------------- #
+# portfolio                                                                    #
+# --------------------------------------------------------------------------- #
+def test_portfolio_not_worse_than_any_constructive():
+    inst = small_instance(11)
+    rep = solve(inst, "portfolio", budget=Budget(time_limit=3.0), params=FAST, seed=0)
+    assert rep.feasible
+    for m in [f"greedy:{s}" for s in STRATEGIES] + ["load_balance"]:
+        single = solve(inst, m, seed=0)
+        assert rep.makespan <= single.makespan + 1e-9, (m, rep.extras)
+    assert set(rep.extras["per_method"]) >= {"load_balance", "greedy:slack_first"}
+    assert rep.extras["winner"] in rep.extras["per_method"]
+
+
+def test_portfolio_respects_time_budget():
+    inst = small_instance(12)
+    rep = solve(inst, "portfolio", budget=Budget(time_limit=2.0), params=FAST)
+    assert rep.wall_time < 10.0
+
+
+# --------------------------------------------------------------------------- #
+# deprecation shims                                                            #
+# --------------------------------------------------------------------------- #
+def test_legacy_entry_points_warn_and_agree():
+    import repro.core as core
+
+    inst = small_instance(13)
+    with pytest.warns(DeprecationWarning, match="repro.solve"):
+        sol = core.construct_greedy(inst, "slack_first", rng=1)
+    assert np.isclose(exact_schedule(inst, sol).makespan,
+                      solve(inst, "greedy:slack_first", seed=1).makespan)
+    with pytest.warns(DeprecationWarning, match="repro.solve"):
+        lb = core.load_balance(inst)
+    assert np.isclose(exact_schedule(inst, lb).makespan,
+                      solve(inst, "load_balance").makespan)
+    params = TSParams.fast(seed=2)
+    with pytest.warns(DeprecationWarning, match="repro.solve"):
+        res = core.tabu_search(inst, construct_greedy(inst, "slack_first", rng=2), params)
+    assert np.isclose(res.best_makespan,
+                      solve(inst, "tabu", params=params, seed=2).makespan)
+    with pytest.warns(DeprecationWarning, match="repro.solve"):
+        mk, _ = core.brute_force_optimum(micro_instance())
+    assert np.isclose(mk, solve(micro_instance(), "ilp_brute_force").makespan)

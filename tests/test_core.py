@@ -1,28 +1,25 @@
 """HDATS core: schedule semantics, construction, memory update, tabu search.
 
-Includes hypothesis property tests over randomly generated instances and a
-brute-force optimality check on micro instances.
+Deterministic tests only — the hypothesis property tests live in
+test_properties.py so this module collects without optional dev deps.
+Search-based tests use the fast profile (TSParams.fast) so tier-1 finishes
+in well under a minute.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     TSParams,
-    brute_force_optimum,
     build_ilp,
-    construct_greedy,
     critical_blocks,
     durations,
     exact_schedule,
     heads_tails,
-    load_balance,
     memory_feasible,
     memory_peaks,
     memory_update,
     random_instance,
-    tabu_search,
-    validate_instance,
+    solve,
 )
 
 
@@ -52,15 +49,17 @@ def assert_schedule_valid(inst, sol, sched):
     np.testing.assert_allclose(sched.finish - sched.start, dur, rtol=1e-9)
 
 
-@pytest.mark.parametrize("builder", [load_balance, lambda i: construct_greedy(i, "slack_first")])
+@pytest.mark.parametrize("method", ["load_balance", "greedy:slack_first"])
 @pytest.mark.parametrize("seed", [0, 1, 2])
-def test_constructors_produce_valid_feasible_schedules(builder, seed):
+def test_constructors_produce_valid_feasible_schedules(method, seed):
     inst = small_instance(seed)
-    sol = builder(inst)
+    rep = solve(inst, method)
+    sol = rep.solution
     sched = exact_schedule(inst, sol)
     assert sched is not None
+    assert np.isclose(sched.makespan, rep.makespan, rtol=1e-9)
     assert_schedule_valid(inst, sol, sched)
-    assert memory_feasible(inst, sol, sched)
+    assert rep.feasible and memory_feasible(inst, sol, sched)
     # every task scheduled exactly once
     all_tasks = sorted(t for seq in sol.proc_seq for t in seq)
     assert all_tasks == list(range(inst.n_tasks))
@@ -69,15 +68,15 @@ def test_constructors_produce_valid_feasible_schedules(builder, seed):
 @pytest.mark.parametrize("strategy", ["slack_first", "r_first", "random", "relax_r"])
 def test_greedy_strategies(strategy):
     inst = small_instance(3)
-    sol = construct_greedy(inst, strategy, rng=7)
-    sched = exact_schedule(inst, sol)
+    rep = solve(inst, f"greedy:{strategy}", seed=7)
+    sched = exact_schedule(inst, rep.solution)
     assert sched is not None and sched.makespan > 0
-    assert memory_feasible(inst, sol, sched)
+    assert memory_feasible(inst, rep.solution, sched)
 
 
 def test_heads_tails_invariants():
     inst = small_instance(1)
-    sol = construct_greedy(inst, "slack_first")
+    sol = solve(inst, "greedy:slack_first").solution
     sched = exact_schedule(inst, sol)
     r, q, slack, crit = heads_tails(inst, sol, sched)
     assert np.allclose(r, sched.start)
@@ -92,12 +91,11 @@ def test_heads_tails_invariants():
 
 def test_memory_update_restores_feasibility_and_uses_fast_tiers():
     inst = small_instance(4, fast_mem_fraction=0.15)
-    sol = construct_greedy(inst, "slack_first")
+    sol = solve(inst, "greedy:slack_first").solution
     # deliberately break: put everything in fast tier 0
     bad = sol.copy()
     bad.mem[:] = 0
     bad.mem[~inst.data_mem_ok[:, 0]] = inst.n_mems - 1
-    sched = exact_schedule(inst, bad)
     fixed = memory_update(inst, bad)
     sched2 = exact_schedule(inst, fixed)
     assert memory_feasible(inst, fixed, sched2)
@@ -107,7 +105,7 @@ def test_memory_update_restores_feasibility_and_uses_fast_tiers():
 
 def test_memory_peaks_differential_array():
     inst = small_instance(5)
-    sol = construct_greedy(inst, "slack_first")
+    sol = solve(inst, "greedy:slack_first").solution
     sched = exact_schedule(inst, sol)
     peaks = memory_peaks(inst, sol, sched)
     # brute check against dense time sampling for tier 0
@@ -128,14 +126,13 @@ def test_memory_peaks_differential_array():
 # --------------------------------------------------------------------------- #
 def test_tabu_improves_and_stays_feasible():
     inst = small_instance(6)
-    init = construct_greedy(inst, "slack_first")
-    res = tabu_search(inst, init, TSParams(max_unimproved=40, time_limit=15, top_k=6, seed=1))
-    assert res.best_makespan <= res.initial_makespan + 1e-9
-    sched = exact_schedule(inst, res.best)
+    rep = solve(inst, "tabu", params=TSParams.fast(seed=1), seed=1)
+    assert rep.makespan <= rep.initial_makespan + 1e-9
+    sched = exact_schedule(inst, rep.solution)
     assert sched is not None
-    assert np.isclose(sched.makespan, res.best_makespan, rtol=1e-9)
-    assert_schedule_valid(inst, res.best, sched)
-    assert memory_feasible(inst, res.best, sched)
+    assert np.isclose(sched.makespan, rep.makespan, rtol=1e-9)
+    assert_schedule_valid(inst, rep.solution, sched)
+    assert memory_feasible(inst, rep.solution, sched)
 
 
 def test_tabu_beats_load_balance():
@@ -143,18 +140,17 @@ def test_tabu_beats_load_balance():
     gaps = []
     for seed in range(3):
         inst = small_instance(seed + 10, n_tasks=50, n_data=120)
-        lb = load_balance(inst)
-        lb_mk = exact_schedule(inst, lb).makespan
-        init = construct_greedy(inst, "slack_first")
-        res = tabu_search(inst, init, TSParams(max_unimproved=60, time_limit=20, top_k=8))
-        gaps.append(1 - res.best_makespan / lb_mk)
+        lb_mk = solve(inst, "load_balance").makespan
+        rep = solve(inst, "tabu",
+                    params=TSParams(max_unimproved=40, time_limit=4.0, top_k=6))
+        gaps.append(1 - rep.makespan / lb_mk)
     assert max(gaps) > 0.02, f"TS should beat LB somewhere: {gaps}"
     assert min(gaps) > -0.01, f"TS should never lose to LB: {gaps}"
 
 
 def test_critical_blocks_structure():
     inst = small_instance(7)
-    sol = construct_greedy(inst, "slack_first")
+    sol = solve(inst, "greedy:slack_first").solution
     sched = exact_schedule(inst, sol)
     _, _, _, crit = heads_tails(inst, sol, sched)
     for p, lo, hi in critical_blocks(sol, crit):
@@ -168,12 +164,13 @@ def test_brute_force_optimality_micro():
         42, n_tasks=5, n_data=6, n_fast_cores=1, n_slow_cores=1,
         edges_per_task=2.0, n_fast_tiers=1, core_restrict_prob=0.0,
     )
-    opt_mk, opt_sol = brute_force_optimum(inst)
-    init = construct_greedy(inst, "slack_first")
-    res = tabu_search(inst, init, TSParams(max_unimproved=200, time_limit=20, top_k=10))
-    assert res.best_makespan >= opt_mk - 1e-6, "TS cannot beat the proven optimum"
-    assert res.best_makespan <= opt_mk * 1.10 + 1e-6, (
-        f"TS should be within 10% of optimum: {res.best_makespan} vs {opt_mk}"
+    opt = solve(inst, "ilp_brute_force")
+    assert opt.extras["exhaustive"]
+    rep = solve(inst, "tabu",
+                params=TSParams(max_unimproved=200, time_limit=10, top_k=10))
+    assert rep.makespan >= opt.makespan - 1e-6, "TS cannot beat the proven optimum"
+    assert rep.makespan <= opt.makespan * 1.10 + 1e-6, (
+        f"TS should be within 10% of optimum: {rep.makespan} vs {opt.makespan}"
     )
 
 
@@ -187,37 +184,3 @@ def test_ilp_model_shape():
     for r in ilp["rows"]:
         assert len(r["cols"]) == len(r["coefs"])
         assert r["sense"] in ("==", "<=")
-
-
-# --------------------------------------------------------------------------- #
-# hypothesis properties                                                        #
-# --------------------------------------------------------------------------- #
-@settings(max_examples=15, deadline=None)
-@given(
-    seed=st.integers(0, 10_000),
-    n_tasks=st.integers(8, 40),
-    frac=st.sampled_from([0.1, 0.2, 0.5]),
-)
-def test_property_pipeline_valid(seed, n_tasks, frac):
-    inst = random_instance(seed, n_tasks=n_tasks, n_data=2 * n_tasks,
-                           fast_mem_fraction=frac)
-    validate_instance(inst)
-    sol = construct_greedy(inst, "slack_first", rng=seed)
-    sched = exact_schedule(inst, sol)
-    assert sched is not None
-    assert_schedule_valid(inst, sol, sched)
-    assert memory_feasible(inst, sol, sched)
-    r, q, slack, crit = heads_tails(inst, sol, sched)
-    assert np.isclose((r + q).max(), sched.makespan, rtol=1e-9)
-    assert crit.any()
-
-
-@settings(max_examples=8, deadline=None)
-@given(seed=st.integers(0, 10_000))
-def test_property_memory_update_feasible(seed):
-    inst = random_instance(seed, n_tasks=20, n_data=50, fast_mem_fraction=0.1)
-    sol = load_balance(inst)
-    out = memory_update(inst, sol, refresh_every=4)
-    sched = exact_schedule(inst, out)
-    assert sched is not None
-    assert memory_feasible(inst, out, sched)

@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs.base import SHAPE_CELLS
 from repro.configs.registry import get_config, get_smoke_config
-from repro.core import exact_schedule, memory_feasible, construct_greedy, load_balance
+from repro.core import TSParams, exact_schedule, memory_feasible, solve
 from repro.plan import (
     hbm_activation_budget,
     layer_costs,
@@ -49,9 +49,9 @@ def test_residency_instance_is_valid_hdats():
     cfg = get_config("mixtral-8x7b")
     inst, meta = residency_instance(cfg, TRAIN, scan_group=4)
     assert inst.n_tasks == 2 * meta["n_groups"]
-    sol = construct_greedy(inst, "slack_first")
-    sched = exact_schedule(inst, sol)
-    assert sched is not None and memory_feasible(inst, sol, sched)
+    rep = solve(inst, "greedy:slack_first")
+    sched = exact_schedule(inst, rep.solution)
+    assert sched is not None and memory_feasible(inst, rep.solution, sched)
     # remat tier must be the most expensive per-byte access for this graph
     assert inst.access_time[0, 2] > inst.access_time[0, 0]
 
@@ -60,7 +60,7 @@ def test_residency_instance_is_valid_hdats():
 def test_plan_beats_or_matches_lb(arch):
     cfg = get_config(arch)
     opt = "adafactor" if arch == "llama3-405b" else "adamw"
-    plan = plan_residency(cfg, TRAIN, optimizer=opt)
+    plan = plan_residency(cfg, TRAIN, optimizer=opt, ts_params=TSParams.fast())
     lb = plan_residency_lb(cfg, TRAIN, optimizer=opt)
     assert plan.est_step_time <= lb.est_step_time * 1.02, (
         f"TS plan worse than LB: {plan.est_step_time} vs {lb.est_step_time}"
@@ -113,5 +113,6 @@ def test_pipeline_plan_schedules_all_microbatches():
 
 def test_pipeline_tabu_not_worse_than_lb():
     cfg = get_config("granite-moe-1b-a400m")
-    out = plan_pipeline(cfg, TRAIN, n_stages=4, n_microbatches=6)
+    out = plan_pipeline(cfg, TRAIN, n_stages=4, n_microbatches=6,
+                        ts_params=TSParams.fast())
     assert out["est_step_time"] <= out["lb_step_time"] * 1.05

@@ -1,0 +1,53 @@
+"""Hypothesis property tests over randomly generated HDATS instances.
+
+Kept separate from test_core so the deterministic suite still collects when
+``hypothesis`` is not installed (it is an optional dev dependency).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    exact_schedule,
+    heads_tails,
+    memory_feasible,
+    memory_update,
+    random_instance,
+    solve,
+    validate_instance,
+)
+
+from test_core import assert_schedule_valid  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_tasks=st.integers(8, 40),
+    frac=st.sampled_from([0.1, 0.2, 0.5]),
+)
+def test_property_pipeline_valid(seed, n_tasks, frac):
+    inst = random_instance(seed, n_tasks=n_tasks, n_data=2 * n_tasks,
+                           fast_mem_fraction=frac)
+    validate_instance(inst)
+    rep = solve(inst, "greedy:slack_first", seed=seed)
+    sched = exact_schedule(inst, rep.solution)
+    assert sched is not None
+    assert_schedule_valid(inst, rep.solution, sched)
+    assert memory_feasible(inst, rep.solution, sched)
+    r, q, slack, crit = heads_tails(inst, rep.solution, sched)
+    assert np.isclose((r + q).max(), sched.makespan, rtol=1e-9)
+    assert crit.any()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_memory_update_feasible(seed):
+    inst = random_instance(seed, n_tasks=20, n_data=50, fast_mem_fraction=0.1)
+    sol = solve(inst, "load_balance").solution
+    out = memory_update(inst, sol, refresh_every=4)
+    sched = exact_schedule(inst, out)
+    assert sched is not None
+    assert memory_feasible(inst, out, sched)
