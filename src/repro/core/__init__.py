@@ -24,6 +24,7 @@ from .solution import (
     memory_feasible,
     memory_peaks,
 )
+from .eval_batch import BatchEval, BatchEvaluator, batch_evaluate, pack_solutions
 from .greedy import STRATEGIES
 from .greedy import construct_greedy as _construct_greedy
 from .load_balance import load_balance as _load_balance
@@ -55,6 +56,10 @@ __all__ = [
     "heads_tails",
     "memory_feasible",
     "memory_peaks",
+    "BatchEval",
+    "BatchEvaluator",
+    "batch_evaluate",
+    "pack_solutions",
     "STRATEGIES",
     "construct_greedy",
     "load_balance",

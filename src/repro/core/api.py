@@ -26,6 +26,7 @@ from typing import Callable, Protocol, Union
 
 import numpy as np
 
+from .eval_batch import BatchEvaluator
 from .greedy import STRATEGIES, construct_greedy
 from .ilp import brute_force_optimum
 from .load_balance import load_balance
@@ -307,11 +308,16 @@ def _solve_tabu(
     callbacks: Callbacks,
     init: Union[Solution, str, None] = None,
     params: TSParams | None = None,
+    backend: str | None = None,
 ) -> SolveReport:
     """Tabu search from a greedy init (``init`` may name a greedy strategy,
-    ``"load_balance"``, or be an explicit :class:`Solution`)."""
+    ``"load_balance"``, or be an explicit :class:`Solution`).  ``backend``
+    overrides ``params.backend`` for the batched exact-evaluation engine
+    (``"numpy"`` reference, ``"jax"`` jitted, ``"scalar"`` oracle)."""
     t0 = time.monotonic()
     params = params or TSParams()
+    if backend is not None:
+        params = dataclasses.replace(params, backend=backend)
     seed = params.seed if seed is None else seed  # None = respect params.seed
     init_sol = _resolve_init(inst, init, seed)
     res = tabu_search(
@@ -386,6 +392,7 @@ def _solve_portfolio(
     methods: tuple[str, ...] | None = None,
     n_tabu_starts: int = 2,
     params: TSParams | None = None,
+    backend: str | None = None,
 ) -> SolveReport:
     """Anytime portfolio: run every constructive method, then spend the
     remaining budget on tabu legs started from the best distinct incumbents.
@@ -393,6 +400,10 @@ def _solve_portfolio(
     By construction the returned makespan is ≤ every constructive method it
     ran, and ≤ its own tabu legs' inits — the whole-budget answer to "which
     solver should I use for this scenario?".
+
+    ``backend`` selects the tabu legs' batched evaluation engine; the final
+    cross-leg verification always runs the batched NumPy reference path (one
+    call over all incumbents, bit-exact with the scalar oracle).
     """
     t0 = time.monotonic()
     methods = DEFAULT_PORTFOLIO if methods is None else tuple(methods)
@@ -451,7 +462,8 @@ def _solve_portfolio(
         ).split(len(starts))
         for m, init_sol in starts:
             rep = solve(inst, "tabu", budget=leg_budget, seed=seed,
-                        callbacks=callbacks, init=init_sol, params=params)
+                        callbacks=callbacks, init=init_sol, params=params,
+                        backend=backend)
             per_method[f"tabu@{m}"] = rep.makespan
             incumbents.append((rep.makespan, f"tabu@{m}", rep.solution))
             _absorb(rep)
@@ -461,13 +473,17 @@ def _solve_portfolio(
 
     incumbents.sort(key=lambda t: t[0])
     best_mk, best_method, best_sol = incumbents[0]
-    sched = exact_schedule(inst, best_sol)
-    assert sched is not None
+    # one batched evaluation over every leg's incumbent re-derives all
+    # makespans and memory feasibility (differential-array peaks) at once
+    ev = BatchEvaluator(inst).evaluate([s for _, _, s in incumbents], peaks=True)
+    assert bool(np.all(ev.feasible)), "a portfolio leg produced a cyclic schedule"
+    assert np.allclose(ev.makespan, [mk for mk, _, _ in incumbents], rtol=1e-9), \
+        "a leg's reported makespan disagrees with its re-evaluated schedule"
     return SolveReport(
         method="portfolio",
         solution=best_sol,
         makespan=best_mk,
-        feasible=memory_feasible(inst, best_sol, sched),
+        feasible=bool(ev.mem_ok[0]),
         initial_makespan=initial_mk,
         iterations=iters,
         n_exact_evals=n_exact,

@@ -1,0 +1,564 @@
+"""Batched array-level schedule evaluation — the §V-F hot path, vectorized.
+
+The tabu search's mixed evaluation strategy exact-evaluates the top-K
+approximate-ranked neighbors each iteration.  The scalar path
+(``solution.exact_schedule`` et al.) runs one per-task Python DP per
+candidate; this module evaluates all K candidates in one call over
+``(K, n_tasks)`` arrays:
+
+* ``BatchEvaluator.evaluate`` — level-synchronous batched longest-path DP
+  over the conjunctive (DAG) + disjunctive (machine-order) graph, with
+  per-candidate cycle detection (cyclic candidates get ``feasible=False``
+  and are reported exactly like the scalar path's ``None``);
+* vectorized ``heads_tails`` — backward sweep over the same level
+  structure, producing R/Q/Slack and the critical mask per candidate;
+* vectorized ``memory_peaks`` — the paper's discretized differential-array
+  sweep over all (candidate, tier) event buckets at once: events are
+  lexsorted per bucket, scattered into a padded per-bucket matrix, and
+  cumsum'd row-wise (no per-tier Python loop).
+
+The NumPy reference path is **bit-exact** with the scalar oracle: every
+reduction is a float ``max`` (order-independent) or replays the scalar
+code's exact summation order (the cumsum-difference segment sums, the
+per-bucket event cumsum).  The optional JAX path (``backend="jax"``) runs
+the forward/backward sweeps as one ``jax.jit``-compiled level loop on
+padded shape buckets; it matches to float32 tolerance (bit-exact under
+``jax_enable_x64``) and falls back to NumPy when JAX is unavailable.
+
+Backend selection is a string flag (``"numpy"`` | ``"jax"`` | ``"scalar"``)
+carried by ``TSParams.backend`` and plumbed through ``repro.solve``;
+``"scalar"`` wraps the original per-candidate functions and exists as the
+oracle for parity tests and benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Sequence
+
+import numpy as np
+
+from .mdfg import Instance
+from .solution import (
+    Schedule,
+    Solution,
+    data_lifetimes,
+    exact_schedule,
+    heads_tails,
+    memory_peaks,
+)
+
+__all__ = [
+    "BACKENDS",
+    "BatchEval",
+    "BatchEvaluator",
+    "PackedSolutions",
+    "pack_solutions",
+    "batch_evaluate",
+]
+
+BACKENDS = ("numpy", "jax", "scalar")
+
+_EPS = 1e-9  # mirrors solution._EPS (critical-slack tolerance)
+
+
+# --------------------------------------------------------------------------- #
+# packing                                                                      #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class PackedSolutions:
+    """Array form of K candidate solutions.
+
+    ``mpred``/``msucc`` are the disjunctive (machine-order) predecessor and
+    successor of each task (-1 = none), i.e. ``Solution.machine_pred_succ``
+    stacked over candidates.
+    """
+
+    assign: np.ndarray   # (K, n_tasks) int64
+    mem: np.ndarray      # (K, n_data) int64
+    mpred: np.ndarray    # (K, n_tasks) int64
+    msucc: np.ndarray    # (K, n_tasks) int64
+
+    @property
+    def k(self) -> int:
+        return self.assign.shape[0]
+
+
+def pack_solutions(inst: Instance, sols: Sequence[Solution]) -> PackedSolutions:
+    """Stack candidate solutions into the array form the batch engine eats."""
+    k, n = len(sols), inst.n_tasks
+    assign = np.empty((k, n), dtype=np.int64)
+    mem = np.empty((k, inst.n_data), dtype=np.int64)
+    mpred = np.full((k, n), -1, dtype=np.int64)
+    msucc = np.full((k, n), -1, dtype=np.int64)
+    for i, sol in enumerate(sols):
+        assign[i] = sol.assign
+        mem[i] = sol.mem
+        mp, ms = mpred[i], msucc[i]
+        for seq in sol.proc_seq:
+            if len(seq) < 2:
+                continue
+            s = np.asarray(seq, dtype=np.int64)
+            mp[s[1:]] = s[:-1]
+            ms[s[:-1]] = s[1:]
+    return PackedSolutions(assign=assign, mem=mem, mpred=mpred, msucc=msucc)
+
+
+# --------------------------------------------------------------------------- #
+# results                                                                      #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class BatchEval:
+    """Per-candidate evaluation results.  Rows with ``feasible[i] == False``
+    correspond to cyclic disjunctive graphs (the scalar path's ``None``);
+    their ``start``/``finish``/``makespan`` entries are undefined."""
+
+    start: np.ndarray        # (K, n_tasks)
+    finish: np.ndarray       # (K, n_tasks)
+    makespan: np.ndarray     # (K,) — np.inf on infeasible rows
+    feasible: np.ndarray     # (K,) bool — acyclic combined graph
+    level: np.ndarray        # (K, n_tasks) DP level (any stable argsort of a
+                             # row is a valid topological order of that row)
+    q: np.ndarray | None = None          # (K, n_tasks) tails, incl. own dur
+    slack: np.ndarray | None = None      # (K, n_tasks)
+    critical: np.ndarray | None = None   # (K, n_tasks) bool
+    peaks: np.ndarray | None = None      # (K, n_mems)
+    mem_ok: np.ndarray | None = None     # (K,) bool — peaks within capacity
+
+    def schedule(self, i: int) -> Schedule | None:
+        """Materialize row ``i`` as a scalar :class:`Schedule` (or ``None``
+        for a cyclic candidate), interchangeable with ``exact_schedule``."""
+        if not self.feasible[i]:
+            return None
+        topo = np.argsort(self.level[i], kind="stable")
+        return Schedule(
+            start=self.start[i].copy(),
+            finish=self.finish[i].copy(),
+            makespan=float(self.makespan[i]),
+            topo=topo,
+        )
+
+
+# --------------------------------------------------------------------------- #
+# the engine                                                                   #
+# --------------------------------------------------------------------------- #
+class BatchEvaluator:
+    """Evaluates K candidate solutions per call on one :class:`Instance`.
+
+    Instance-level structure (CSR adjacency, edge owner maps, base degrees)
+    is precomputed once; ``evaluate`` then runs pure array code.
+    """
+
+    def __init__(self, inst: Instance, backend: str = "numpy"):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        if backend == "jax" and not _jax_available():
+            warnings.warn(
+                "backend='jax' requested but jax is not importable; "
+                "falling back to the NumPy batch path",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            backend = "numpy"
+        self.inst = inst
+        self.backend = backend
+        n = inst.n_tasks
+        # conjunctive edge list (src, dst) and degrees
+        self._edge_src = np.repeat(np.arange(n), np.diff(inst.succ_indptr))
+        self._edge_dst = inst.succ_idx
+        self._base_indeg = np.diff(inst.pred_indptr).astype(np.int64)
+        self._base_outdeg = np.diff(inst.succ_indptr).astype(np.int64)
+        # owner task of every input/output CSR slot (for batched durations)
+        self._in_owner = np.repeat(np.arange(n), np.diff(inst.in_indptr))
+        self._out_owner = np.repeat(np.arange(n), np.diff(inst.out_indptr))
+        self._jax_fns: dict = {}
+
+    # -- public API -------------------------------------------------------- #
+    def evaluate(
+        self,
+        sols: Sequence[Solution] | PackedSolutions,
+        *,
+        tails: bool = False,
+        peaks: bool = False,
+    ) -> BatchEval:
+        """Batched ``exact_schedule`` (+ optional ``heads_tails`` and
+        ``memory_peaks``) for all candidates in one call."""
+        if self.backend == "scalar":
+            if isinstance(sols, PackedSolutions):
+                raise ValueError("backend='scalar' needs Solution objects, not PackedSolutions")
+            return self._evaluate_scalar(sols, tails=tails, peaks=peaks)
+        packed = sols if isinstance(sols, PackedSolutions) else pack_solutions(self.inst, sols)
+        dur = self._durations(packed)
+        if self.backend == "jax":
+            start, finish, level, feasible, q = _jax_sweeps(self, packed, dur, tails)
+        else:
+            start, finish, level, feasible = self._forward_dp(packed, dur)
+            # the scalar heads_tails derives durations as finish - start; use
+            # the same operands so Q stays bit-exact
+            q = self._backward_q(packed, finish - start, feasible) if tails else None
+        makespan = np.where(feasible, finish.max(axis=1), np.inf)
+        out = BatchEval(start=start, finish=finish, makespan=makespan,
+                        feasible=feasible, level=level)
+        if tails:
+            out.q = q
+            out.slack = makespan[:, None] - start - q
+            out.critical = out.slack <= _EPS * np.maximum(1.0, makespan)[:, None]
+        if peaks:
+            out.peaks, out.mem_ok = self._memory_peaks(packed, start, finish, feasible)
+        return out
+
+    # -- scalar oracle ------------------------------------------------------ #
+    def _evaluate_scalar(self, sols: Sequence[Solution], *, tails: bool, peaks: bool) -> BatchEval:
+        inst = self.inst
+        k, n = len(sols), inst.n_tasks
+        start = np.zeros((k, n))
+        finish = np.zeros((k, n))
+        level = np.zeros((k, n), dtype=np.int64)
+        makespan = np.full(k, np.inf)
+        feasible = np.zeros(k, dtype=bool)
+        q = np.zeros((k, n)) if tails else None
+        slack = np.zeros((k, n)) if tails else None
+        critical = np.zeros((k, n), dtype=bool) if tails else None
+        pk = np.zeros((k, inst.n_mems)) if peaks else None
+        mem_ok = np.zeros(k, dtype=bool) if peaks else None
+        for i, sol in enumerate(sols):
+            sched = exact_schedule(inst, sol)
+            if sched is None:
+                continue
+            feasible[i] = True
+            start[i], finish[i] = sched.start, sched.finish
+            makespan[i] = sched.makespan
+            # topo position doubles as a level key: stable argsort recovers it
+            level[i, sched.topo] = np.arange(n)
+            if tails:
+                _, q[i], slack[i], critical[i] = heads_tails(inst, sol, sched)
+            if peaks:
+                pk[i] = memory_peaks(inst, sol, sched)
+                mem_ok[i] = bool(np.all(pk[i] <= inst.mem_cap * (1 + 1e-6) + 1e-6))
+        return BatchEval(start=start, finish=finish, makespan=makespan, feasible=feasible,
+                         level=level, q=q, slack=slack, critical=critical,
+                         peaks=pk, mem_ok=mem_ok)
+
+    # -- batched durations -------------------------------------------------- #
+    def _durations(self, packed: PackedSolutions) -> np.ndarray:
+        """Replays ``solution.durations`` per row (same cumsum-difference
+        segment sums ⇒ bit-exact)."""
+        inst = self.inst
+        at = inst.access_time
+        t_in = _segment_sums_2d(
+            inst.data_size[inst.in_idx][None, :]
+            * at[packed.assign[:, self._in_owner], packed.mem[:, inst.in_idx]],
+            inst.in_indptr,
+        )
+        t_out = _segment_sums_2d(
+            inst.data_size[inst.out_idx][None, :]
+            * at[packed.assign[:, self._out_owner], packed.mem[:, inst.out_idx]],
+            inst.out_indptr,
+        )
+        pt = inst.proc_time[np.arange(inst.n_tasks)[None, :], packed.assign]
+        return t_in + pt + t_out
+
+    # -- forward DP ---------------------------------------------------------- #
+    def _forward_dp(self, packed: PackedSolutions, dur: np.ndarray):
+        """Level-synchronous Kahn over the combined graph, all rows at once.
+
+        Each round pops every currently in-degree-0 unfinished task of every
+        candidate, finalizes its finish time, and relaxes its conjunctive and
+        disjunctive successors with scatter-max.  Rows that stall before
+        completing all tasks are cyclic ⇒ infeasible.
+        """
+        n = self.inst.n_tasks
+        k = packed.k
+        indeg = (self._base_indeg[None, :] + (packed.mpred >= 0)).ravel()
+        start = np.zeros(k * n)
+        finish = np.zeros((k, n))
+        level = np.zeros((k, n), dtype=np.int64)
+        done = np.zeros((k, n), dtype=bool)
+        ready = (indeg == 0).reshape(k, n)
+        lev = 0
+        while ready.any():
+            rk, ru = np.nonzero(ready)
+            flat_u = rk * n + ru
+            f = start[flat_u] + dur[rk, ru]
+            finish[rk, ru] = f
+            level[rk, ru] = lev
+            done[rk, ru] = True
+            # conjunctive successors of every popped (row, task), plus the
+            # disjunctive successor (at most one per popped task), relaxed in
+            # one flat scatter-max + one bincount degree decrement
+            rows, dsts, fvals = _expand_edges(
+                self.inst.succ_indptr, self.inst.succ_idx, rk, ru, f
+            )
+            targets = rows * n + dsts
+            ms = packed.msucc[rk, ru]
+            has = ms >= 0
+            if has.any():
+                targets = np.concatenate([targets, rk[has] * n + ms[has]])
+                fvals = np.concatenate([fvals, f[has]])
+            if len(targets):
+                np.maximum.at(start, targets, fvals)
+                indeg -= np.bincount(targets, minlength=k * n)
+            ready = (indeg == 0).reshape(k, n) & ~done
+            lev += 1
+        feasible = done.all(axis=1)
+        return start.reshape(k, n), finish, level, feasible
+
+    # -- backward sweep ------------------------------------------------------ #
+    def _backward_q(self, packed: PackedSolutions, dur: np.ndarray,
+                    feasible: np.ndarray) -> np.ndarray:
+        """Q[i] = T[i] + max_{j∈succ} Q[j], level-synchronous from the sinks.
+        Pure-max reduction over the same operands as the scalar sweep ⇒
+        bit-exact.  Infeasible rows are left untouched (zeros)."""
+        n = self.inst.n_tasks
+        k = packed.k
+        outdeg = self._base_outdeg[None, :] + (packed.msucc >= 0)
+        # never pop tasks of infeasible rows: poison their out-degrees
+        outdeg[~feasible] = -1
+        outdeg = outdeg.ravel()
+        q = np.zeros((k, n))
+        qmax = np.zeros(k * n)  # running max over successors' Q
+        done = np.zeros((k, n), dtype=bool)
+        ready = (outdeg == 0).reshape(k, n)
+        while ready.any():
+            rk, ru = np.nonzero(ready)
+            qv = dur[rk, ru] + qmax[rk * n + ru]
+            q[rk, ru] = qv
+            done[rk, ru] = True
+            rows, dsts, qvals = _expand_edges(
+                self.inst.pred_indptr, self.inst.pred_idx, rk, ru, qv
+            )
+            targets = rows * n + dsts
+            mp = packed.mpred[rk, ru]
+            has = mp >= 0
+            if has.any():
+                targets = np.concatenate([targets, rk[has] * n + mp[has]])
+                qvals = np.concatenate([qvals, qv[has]])
+            if len(targets):
+                np.maximum.at(qmax, targets, qvals)
+                outdeg -= np.bincount(targets, minlength=k * n)
+            ready = (outdeg == 0).reshape(k, n) & ~done
+        return q
+
+    # -- memory peaks --------------------------------------------------------- #
+    def _memory_peaks(self, packed: PackedSolutions, start: np.ndarray,
+                      finish: np.ndarray, feasible: np.ndarray):
+        """All (candidate, tier) differential-array sweeps at once.
+
+        Events of every candidate are keyed by (row, tier, time, Δ) and
+        lexsorted — stable, so within ties the scalar path's
+        births-then-deaths block order is preserved — then scattered into a
+        padded per-bucket matrix whose row-wise cumsum replays each bucket's
+        scalar summation order exactly.
+        """
+        inst = self.inst
+        k, n_mems = packed.k, inst.n_mems
+        birth, death = self._lifetimes(packed, start, finish)
+        sizes = np.broadcast_to(inst.data_size[None, :], (k, inst.n_data))
+        # per row: [all births | all deaths], matching the scalar concat order
+        times = np.concatenate([birth, death], axis=1)          # (K, 2D)
+        deltas = np.concatenate([sizes, -sizes], axis=1)        # (K, 2D)
+        tiers = np.concatenate([packed.mem, packed.mem], axis=1)
+        rows = np.broadcast_to(np.arange(k)[:, None], times.shape)
+        keys = np.lexsort((deltas.ravel(), times.ravel(), tiers.ravel(), rows.ravel()))
+        bucket = (rows.ravel() * n_mems + tiers.ravel())[keys]  # sorted bucket ids
+        # position of each sorted event inside its bucket
+        counts = np.bincount(bucket, minlength=k * n_mems)
+        bucket_start = np.zeros(k * n_mems + 1, dtype=np.int64)
+        np.cumsum(counts, out=bucket_start[1:])
+        pos = np.arange(len(bucket)) - bucket_start[bucket]
+        width = int(counts.max()) if len(counts) else 0
+        padded = np.zeros((k * n_mems, width))
+        padded[bucket, pos] = deltas.ravel()[keys]
+        run = np.cumsum(padded, axis=1)
+        # trailing padding repeats each bucket's final prefix (itself a real
+        # prefix) and empty buckets stay all-zero, so the row max IS the
+        # scalar per-bucket run.max() / 0.0 — no clamping needed
+        peaks = (run.max(axis=1) if width else np.zeros(k * n_mems)).reshape(k, n_mems)
+        cap = inst.mem_cap
+        mem_ok = np.all(peaks <= cap[None, :] * (1 + 1e-6) + 1e-6, axis=1) & feasible
+        return peaks, mem_ok
+
+    def _lifetimes(self, packed: PackedSolutions, start: np.ndarray, finish: np.ndarray):
+        """Batched ``data_lifetimes``: birth = producer start (0 for initial
+        inputs), death = max consumer finish (fallback: birth / producer
+        finish).  Max reductions only ⇒ bit-exact."""
+        inst = self.inst
+        k = packed.k
+        prod = inst.producer
+        has_prod = prod >= 0
+        birth = np.zeros((k, inst.n_data))
+        birth[:, has_prod] = start[:, prod[has_prod]]
+        n_cons = np.diff(inst.cons_indptr)
+        has_cons = n_cons > 0
+        death = np.where(has_prod[None, :], finish[:, np.where(has_prod, prod, 0)], birth)
+        if inst.cons_idx.size:
+            owner = np.repeat(np.arange(inst.n_data), n_cons)
+            cons_fin = finish[:, inst.cons_idx]                  # (K, Ec)
+            dmax = np.full((k, inst.n_data), -np.inf)
+            rows = np.broadcast_to(np.arange(k)[:, None], cons_fin.shape)
+            cols = np.broadcast_to(owner[None, :], cons_fin.shape)
+            np.maximum.at(dmax, (rows.ravel(), cols.ravel()), cons_fin.ravel())
+            death = np.where(has_cons[None, :], dmax, death)
+        return birth, death
+
+
+# --------------------------------------------------------------------------- #
+# array helpers                                                                #
+# --------------------------------------------------------------------------- #
+def _segment_sums_2d(values: np.ndarray, indptr: np.ndarray) -> np.ndarray:
+    """Row-wise CSR segment sums via the cumsum-difference trick — the exact
+    computation ``solution.segment_sums`` does, applied per row."""
+    k = values.shape[0]
+    c = np.zeros((k, values.shape[1] + 1), dtype=np.float64)
+    np.cumsum(values, axis=1, out=c[:, 1:])
+    return c[:, indptr[1:]] - c[:, indptr[:-1]]
+
+
+def _expand_edges(indptr: np.ndarray, idx: np.ndarray, rk: np.ndarray,
+                  ru: np.ndarray, vals: np.ndarray):
+    """For popped nodes ``(rk[i], ru[i])`` with value ``vals[i]``, expand the
+    CSR rows ``idx[indptr[u]:indptr[u+1]]`` into flat (row, dst, val) arrays."""
+    counts = indptr[ru + 1] - indptr[ru]
+    total = int(counts.sum())
+    if total == 0:
+        empty = np.zeros(0, dtype=np.int64)
+        return empty, empty, np.zeros(0)
+    cum = np.cumsum(counts)
+    flat = np.arange(total) + np.repeat(indptr[ru] - (cum - counts), counts)
+    return np.repeat(rk, counts), idx[flat], np.repeat(vals, counts)
+
+
+# --------------------------------------------------------------------------- #
+# JAX path                                                                     #
+# --------------------------------------------------------------------------- #
+def _jax_available() -> bool:
+    try:
+        import jax  # noqa: F401
+
+        return True
+    except Exception:
+        return False
+
+
+def _jax_sweeps(engine: BatchEvaluator, packed: PackedSolutions, dur: np.ndarray,
+                tails: bool):
+    """Forward DP (+ optional backward Q) as one jitted level loop.
+
+    Shapes are bucketed (K padded to the next power of two) so recompiles are
+    bounded; padding rows have no machine edges and zero durations, i.e. they
+    are trivially feasible and discarded on the way out.  Peaks/lifetimes stay
+    on the shared NumPy sweep — they are sort-bound and off the hot path.
+    """
+    import jax.numpy as jnp
+
+    n = engine.inst.n_tasks
+    k = packed.k
+    kp = 1 << max(0, (k - 1).bit_length())  # next pow2 ≥ k
+    fdtype = jnp.zeros(0).dtype  # float32 unless jax_enable_x64
+
+    def pad(a, fill):
+        if a.shape[0] == kp:
+            return a
+        return np.concatenate([a, np.full((kp - a.shape[0],) + a.shape[1:], fill, a.dtype)])
+
+    dur_p = pad(dur, 0.0)
+    mpred_p = pad(packed.mpred, -1)
+    msucc_p = pad(packed.msucc, -1)
+
+    key = (kp, n, bool(tails))
+    fn = engine._jax_fns.get(key)
+    if fn is None:
+        fn = _build_jax_sweeps(engine, kp, tails)
+        engine._jax_fns[key] = fn
+    start, finish, level, n_done, q = fn(
+        jnp.asarray(dur_p, fdtype), jnp.asarray(mpred_p), jnp.asarray(msucc_p)
+    )
+    start = np.asarray(start, np.float64)[:k]
+    finish = np.asarray(finish, np.float64)[:k]
+    level = np.asarray(level, np.int64)[:k]
+    feasible = np.asarray(n_done)[:k] == n
+    qq = np.asarray(q, np.float64)[:k] if tails else None
+    return start, finish, level, feasible, qq
+
+
+def _build_jax_sweeps(engine: BatchEvaluator, kp: int, tails: bool):
+    import jax
+    import jax.numpy as jnp
+
+    inst = engine.inst
+    n = inst.n_tasks
+    src = jnp.asarray(engine._edge_src)
+    dst = jnp.asarray(engine._edge_dst)
+    base_indeg = jnp.asarray(engine._base_indeg)
+    base_outdeg = jnp.asarray(engine._base_outdeg)
+    rows_kp = jnp.arange(kp)[:, None]
+    neg_inf = -jnp.inf
+
+    def _level_loop(deg0, links, dur, edge_src, edge_dst):
+        """Shared level-synchronous sweep: forward (value = start + dur, relax
+        successors) and backward (value = dur + max-child-Q, relax
+        predecessors) are the same scatter-max recursion on (K, n+1) padded
+        slots — slot ``n`` swallows updates for missing machine links."""
+
+        def cond(state):
+            _, _, _, _, ready, _, lev = state
+            return jnp.logical_and(ready.any(), lev <= n)
+
+        def body(state):
+            acc, val, level, deg, ready, done, lev = state
+            v = acc[:, :n] + dur                         # node value when popped
+            val = jnp.where(ready, v, val)
+            level = jnp.where(ready, lev, level)
+            contrib = jnp.where(ready[:, edge_src], val[:, edge_src], neg_inf)
+            acc = acc.at[:, edge_dst].max(contrib)
+            deg = deg.at[:, edge_dst].add(-ready[:, edge_src].astype(deg.dtype))
+            lnk = jnp.where(ready & (links >= 0), links, n)  # n = dummy slot
+            acc = acc.at[rows_kp, lnk].max(jnp.where(ready, val, neg_inf))
+            deg = deg.at[rows_kp, lnk].add(-ready.astype(deg.dtype))
+            done = done | ready
+            ready = (deg[:, :n] == 0) & ~done
+            return acc, val, level, deg, ready, done, lev + 1
+
+        acc = jnp.zeros((kp, n + 1), dur.dtype)
+        val = jnp.zeros((kp, n), dur.dtype)
+        level = jnp.zeros((kp, n), jnp.int32)
+        deg = jnp.concatenate([deg0, jnp.ones((kp, 1), deg0.dtype)], axis=1)
+        done = jnp.zeros((kp, n), bool)
+        ready = (deg[:, :n] == 0) & ~done
+        acc, val, level, deg, ready, done, _ = jax.lax.while_loop(
+            cond, body, (acc, val, level, deg, ready, done, jnp.int32(0))
+        )
+        return acc[:, :n], val, done, level
+
+    @jax.jit
+    def sweeps(dur, mpred, msucc):
+        indeg0 = base_indeg[None, :] + (mpred >= 0)
+        start, finish, done, level = _level_loop(indeg0, msucc, dur, src, dst)
+        n_done = done.sum(axis=1)
+        start = jnp.where(done, start, 0.0)
+        if tails:
+            outdeg0 = base_outdeg[None, :] + (msucc >= 0)
+            # poison incomplete (cyclic) rows so the backward pass skips them
+            outdeg0 = jnp.where((n_done == n)[:, None], outdeg0, -1)
+            # mirror the scalar heads_tails operands (dur = finish - start)
+            _, q, _, _ = _level_loop(outdeg0, mpred, finish - start, dst, src)
+        else:
+            q = jnp.zeros_like(dur)
+        return start, finish, level, n_done, q
+
+    return sweeps
+
+
+# --------------------------------------------------------------------------- #
+# convenience                                                                  #
+# --------------------------------------------------------------------------- #
+def batch_evaluate(
+    inst: Instance,
+    sols: Sequence[Solution],
+    *,
+    backend: str = "numpy",
+    tails: bool = False,
+    peaks: bool = False,
+) -> BatchEval:
+    """One-shot helper: ``BatchEvaluator(inst, backend).evaluate(...)``."""
+    return BatchEvaluator(inst, backend=backend).evaluate(sols, tails=tails, peaks=peaks)

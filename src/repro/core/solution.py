@@ -198,9 +198,8 @@ def memory_peaks(inst: Instance, sol: Solution, sched: Schedule) -> np.ndarray:
         b, e, s = birth[sel], death[sel], inst.data_size[sel]
         # discretize: peaks only change at move-in events (paper's observation)
         events = np.concatenate([np.stack([b, s], 1), np.stack([e, -s], 1)], axis=0)
-        order = np.lexsort((-events[:, 1], events[:, 0]))  # releases before acquires at ties? no:
-        # at equal time, apply releases (negative) first so back-to-back reuse
-        # does not double count — lexsort key: time asc, then delta asc.
+        # at equal time, apply releases (negative delta) first so back-to-back
+        # reuse does not double count — lexsort key: time asc, then delta asc
         order = np.lexsort((events[:, 1], events[:, 0]))
         run = np.cumsum(events[order, 1])
         peaks[m] = run.max() if len(run) else 0.0

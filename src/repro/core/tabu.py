@@ -6,7 +6,11 @@ the same machine) and **change-core** (k-insertion onto another compatible
 core) — while the inner layer re-allocates memory with Algorithm 3 after each
 accepted move.  Neighbors are ranked with a cheap *approximate evaluation*
 (head/tail window estimate); only the top-K are *exactly* evaluated (full DP)
-— the paper's mixed evaluation strategy (§V-F).  Move attributes are tabu for
+— the paper's mixed evaluation strategy (§V-F).  The exact stage runs on the
+batched array-level engine (``eval_batch.BatchEvaluator``): top-K candidates
+are evaluated per chunk in one ``(K, n_tasks)`` DP instead of K Python-loop
+DPs; ``TSParams.backend`` selects the NumPy reference path (default), the
+``jax.jit`` path, or the per-candidate scalar oracle.  Move attributes are tabu for
 θ1 = m + rand()%(2m) (change-core) / θ2 = n + rand()%n (N7) iterations, with
 the standard aspiration criterion (a tabu move is admissible when it improves
 the best known makespan).
@@ -18,6 +22,7 @@ import time
 
 import numpy as np
 
+from .eval_batch import BatchEvaluator
 from .mdfg import Instance
 from .memory_update import memory_update
 from .solution import Solution, durations, exact_schedule, heads_tails
@@ -39,6 +44,7 @@ class TSParams:
     seed: int = 0
     max_iters: int | None = None       # hard cap on outer iterations
     max_evals: int | None = None       # hard cap on exact schedule evaluations
+    backend: str = "numpy"             # exact-eval engine: numpy | jax | scalar
 
     @classmethod
     def fast(cls, seed: int = 0) -> "TSParams":
@@ -243,6 +249,7 @@ def tabu_search(
     params = params or TSParams()
     rng = np.random.default_rng(params.seed)
     t0 = time.monotonic()
+    engine = BatchEvaluator(inst, backend=params.backend)
 
     cur = memory_update(inst, init, refresh_every=params.mem_refresh_every)
     sched = exact_schedule(inst, cur)
@@ -313,32 +320,51 @@ def tabu_search(
                 scored.append((est, m))
         scored.sort(key=lambda t: t[0])
 
+        # pre-filter by the tabu table (no evaluation spent on hopeless moves)
+        admissible: list[tuple[Move, bool]] = []
+        for est, m in scored:
+            is_tabu = tabu.get(resulting_config(m), -1) >= it
+            if is_tabu and est >= best_mk:
+                continue
+            admissible.append((m, is_tabu))
+
+        # exact-evaluate the approximate top-K in batched chunks: one
+        # (chunk, n_tasks) array DP per chunk instead of per-candidate loops.
+        # Cyclic candidates come back feasible=False (the scalar path's None).
         chosen = None
         chosen_sched = None
         chosen_mk = np.inf
         examined = 0
-        for est, m in scored:
-            if examined >= params.top_k and chosen is not None:
+        pos = 0
+        while pos < len(admissible):
+            if chosen is not None and examined >= params.top_k:
                 break
-            # re-check mid-iteration: a round where nothing is accepted would
-            # otherwise exact-evaluate the whole neighborhood past the cap
-            if params.max_evals is not None and n_exact >= params.max_evals:
-                break
-            cfg = resulting_config(m)
-            is_tabu = tabu.get(cfg, -1) >= it
-            if is_tabu and est >= best_mk:
-                continue
-            cand = cur.copy()
-            apply_move(cand, m)
-            s = exact_schedule(inst, cand)
-            n_exact += 1
-            examined += 1
-            if s is None:
-                continue
-            if is_tabu and s.makespan >= best_mk:
-                continue  # aspiration failed
-            if s.makespan < chosen_mk:
-                chosen, chosen_sched, chosen_mk = (m, cand), s, s.makespan
+            size = min(params.top_k, len(admissible) - pos)
+            if params.max_evals is not None:
+                # a round where nothing is accepted must not exact-evaluate
+                # the whole neighborhood past the cap
+                size = min(size, params.max_evals - n_exact)
+                if size <= 0:
+                    break
+            chunk = admissible[pos : pos + size]
+            pos += size
+            cands = []
+            for m, _ in chunk:
+                cand = cur.copy()
+                apply_move(cand, m)
+                cands.append(cand)
+            ev = engine.evaluate(cands)
+            n_exact += size
+            examined += size
+            for j, (m, is_tabu) in enumerate(chunk):
+                if not ev.feasible[j]:
+                    continue
+                mk_j = float(ev.makespan[j])
+                if is_tabu and mk_j >= best_mk:
+                    continue  # aspiration failed
+                if mk_j < chosen_mk:
+                    chosen, chosen_mk = (m, cands[j]), mk_j
+                    chosen_sched = ev.schedule(j)
 
         if chosen is None and params.max_evals is not None and n_exact >= params.max_evals:
             stop_reason = "max_evals"

@@ -138,10 +138,17 @@ def adafactor(
     clip_norm: float = 1.0,
     min_dim_size_to_factor: int = 128,
     master_fp32: bool = False,
+    relative_step: bool = True,
+    eps_scale: float = 1e-3,
 ) -> Optimizer:
     """Adafactor (Shazeer & Stern 2018) without momentum: the memory-lean
     choice for llama3-405b (second moment factored into row/col statistics).
-    ``master_fp32``: bf16 stored/communicated params + fp32 master copy."""
+    ``master_fp32``: bf16 stored/communicated params + fp32 master copy.
+
+    ``relative_step`` applies the paper's §8 relative step size
+    α_t = lr_t · max(eps_scale, RMS(w)): with the RMS-clipped update the
+    absolute step otherwise cannot shrink below ``lr`` and the iterate
+    limit-cycles around the optimum instead of converging."""
     lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
 
     def factored(p) -> bool:
@@ -185,7 +192,12 @@ def adafactor(
             # update clipping (RMS(u) <= clip_threshold)
             rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
             u = u / jnp.maximum(1.0, rms_u / clip_threshold)
-            w_new = w.astype(jnp.float32) - lr_t * (u + weight_decay * w.astype(jnp.float32))
+            wf = w.astype(jnp.float32)
+            alpha = lr_t
+            if relative_step:
+                rms_w = jnp.sqrt(jnp.mean(jnp.square(wf)) + 1e-30)
+                alpha = lr_t * jnp.maximum(eps_scale, rms_w)
+            w_new = wf - alpha * (u + weight_decay * wf)
             return w_new.astype(p.dtype), w_new, new_slot
 
         out = jax.tree.map(

@@ -4,6 +4,7 @@ from .partitioning import (
     make_rules,
     param_rules,
     shard,
+    shard_map,
     set_mesh,
     get_mesh,
 )
@@ -14,6 +15,7 @@ __all__ = [
     "make_rules",
     "param_rules",
     "shard",
+    "shard_map",
     "set_mesh",
     "get_mesh",
 ]

@@ -111,7 +111,8 @@ def test_load_balance_parity_with_legacy():
 
 def test_tabu_parity_with_legacy():
     inst = small_instance(4)
-    params = TSParams(max_unimproved=25, time_limit=30.0, top_k=4, seed=3)
+    params = TSParams(max_unimproved=12, time_limit=60.0, top_k=4,
+                      max_iters=80, seed=3)
     legacy = tabu_search(inst, construct_greedy(inst, "slack_first", rng=3), params)
     rep = solve(inst, "tabu", params=params, seed=3)
     assert np.isclose(rep.makespan, legacy.best_makespan, rtol=1e-12)
@@ -128,7 +129,8 @@ def test_brute_force_parity_with_legacy():
 def test_params_seed_respected_when_solve_seed_omitted():
     """solve() must not silently override an explicit TSParams.seed."""
     inst = small_instance(14)
-    params = TSParams(max_unimproved=25, time_limit=30.0, top_k=4, seed=11)
+    params = TSParams(max_unimproved=12, time_limit=60.0, top_k=4,
+                      max_iters=80, seed=11)
     legacy = tabu_search(inst, construct_greedy(inst, "slack_first", rng=11), params)
     rep = solve(inst, "tabu", params=params)  # no seed= given
     assert np.isclose(rep.makespan, legacy.best_makespan, rtol=1e-12)
@@ -250,7 +252,10 @@ def test_legacy_entry_points_warn_and_agree():
         lb = core.load_balance(inst)
     assert np.isclose(exact_schedule(inst, lb).makespan,
                       solve(inst, "load_balance").makespan)
-    params = TSParams.fast(seed=2)
+    # iteration-bounded so the comparison is deterministic (a binding wall
+    # clock would make the two runs diverge on slow machines)
+    params = TSParams(max_unimproved=10, time_limit=60.0, top_k=4,
+                      max_iters=40, seed=2)
     with pytest.warns(DeprecationWarning, match="repro.solve"):
         res = core.tabu_search(inst, construct_greedy(inst, "slack_first", rng=2), params)
     assert np.isclose(res.best_makespan,

@@ -11,6 +11,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-device subprocesses: minutes, not seconds
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

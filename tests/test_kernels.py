@@ -21,6 +21,7 @@ def tol(dtype):
 
 
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
     "b,sq,skv,h,kvh,d,causal,window,qoff,bq,bkv",
@@ -77,6 +78,7 @@ def test_chunked_attention_matches_oracle():
 
 
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,t,d,bt", [(2, 512, 64, 256), (1, 256, 128, 128), (3, 128, 32, 64)])
 def test_rglru_sweep(b, t, d, bt, dtype):
@@ -101,6 +103,7 @@ def test_rglru_no_initial_state():
 
 
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 @pytest.mark.parametrize("b,t,h,p,g,n,ch", [
     (2, 256, 4, 32, 2, 64, 128),
     (1, 256, 4, 64, 1, 128, 64),
@@ -122,6 +125,7 @@ def test_ssd_sweep(b, t, h, p, g, n, ch):
     np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr), rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_flash_xla_custom_vjp_grads():
     """XLA-level flash (the dry-run path) must match oracle grads exactly."""
     from repro.kernels.flash_xla import flash_attention_xla
@@ -139,6 +143,7 @@ def test_flash_xla_custom_vjp_grads():
             assert float(jnp.max(jnp.abs(a - b))) / scale < 1e-5
 
 
+@pytest.mark.slow
 def test_rglru_xla_custom_vjp_grads():
     """Chunk-boundary linear-scan VJP must match full-AD grads."""
     from repro.kernels.rglru_xla import rglru_xla

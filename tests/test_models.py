@@ -26,7 +26,17 @@ def _batch(cfg, b, s):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# the slowest-compiling archs run their forward/train smoke in the slow lane;
+# tier-1 keeps one representative per remaining family plus the config checks
+_SMOKE_SLOW = {"whisper-medium", "recurrentgemma-2b", "mamba2-780m", "mixtral-8x7b",
+               "qwen2.5-14b", "internvl2-26b"}
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [pytest.param(a, marks=pytest.mark.slow) if a in _SMOKE_SLOW else a
+     for a in ARCH_IDS],
+)
 def test_smoke_forward_and_train_step(arch):
     """Reduced config: one forward + one grad step, shapes + finiteness."""
     cfg = get_smoke_config(arch)
@@ -90,6 +100,7 @@ def _fill_whisper_cross(cfg, params, batch, cache):
     return cache
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_decode_matches_forward(arch):
     cfg = get_smoke_config(arch)
@@ -110,6 +121,7 @@ def test_decode_matches_forward(arch):
     assert worst / scale < 2e-3, f"decode diverges from forward: {worst} (scale {scale})"
 
 
+@pytest.mark.slow
 def test_ring_cache_wraparound():
     """Sliding-window decode past the window edge stays exact (mixtral-style)."""
     cfg = get_smoke_config("mixtral-8x7b")
@@ -129,6 +141,7 @@ def test_ring_cache_wraparound():
     assert worst / scale < 2e-3, f"ring cache wrong after wraparound: {worst}"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2.5-14b", "mamba2-780m", "recurrentgemma-2b", "whisper-medium"])
 def test_prefill_matches_forward(arch):
     from repro.runtime import make_prefill_step, make_serve_step

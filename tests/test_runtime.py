@@ -117,6 +117,7 @@ def _setup(arch="qwen2.5-14b", lr=1e-2):
     return cfg, state, ts, batch_at
 
 
+@pytest.mark.slow
 def test_training_loss_decreases():
     _, state, ts, batch_at = _setup()
     first = last = None
@@ -144,6 +145,7 @@ def test_checkpoint_roundtrip():
         shutil.rmtree(d)
 
 
+@pytest.mark.slow
 def test_failure_recovery_is_bitwise_deterministic():
     _, state, ts, batch_at = _setup("granite-moe-1b-a400m", lr=3e-3)
     d1, d2 = tempfile.mkdtemp(), tempfile.mkdtemp()
