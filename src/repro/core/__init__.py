@@ -13,7 +13,7 @@ emit ``DeprecationWarning``.
 import functools
 import warnings
 
-from .mdfg import Instance, random_instance, validate_instance
+from .mdfg import InfeasibleInstanceError, Instance, random_instance, validate_instance
 from .solution import (
     Schedule,
     Solution,
@@ -24,12 +24,29 @@ from .solution import (
     memory_feasible,
     memory_peaks,
 )
-from .eval_batch import BatchEval, BatchEvaluator, batch_evaluate, pack_solutions
+from .eval_batch import (
+    BatchEval,
+    BatchEvaluator,
+    MoveBatch,
+    PackedSolutions,
+    approx_eval_moves,
+    batch_evaluate,
+    pack_solutions,
+)
 from .greedy import STRATEGIES
 from .greedy import construct_greedy as _construct_greedy
 from .load_balance import load_balance as _load_balance
 from .memory_update import memory_update
-from .tabu import Move, TSEvent, TSParams, TSResult, apply_move, critical_blocks
+from .tabu import (
+    Move,
+    MultiWalkResult,
+    TSEvent,
+    TSParams,
+    TSResult,
+    apply_move,
+    critical_blocks,
+    tabu_multiwalk,
+)
 from .tabu import tabu_search as _tabu_search
 from .ilp import build_ilp
 from .ilp import brute_force_optimum as _brute_force_optimum
@@ -45,6 +62,7 @@ from .api import (
 )
 
 __all__ = [
+    "InfeasibleInstanceError",
     "Instance",
     "random_instance",
     "validate_instance",
@@ -58,6 +76,9 @@ __all__ = [
     "memory_peaks",
     "BatchEval",
     "BatchEvaluator",
+    "MoveBatch",
+    "PackedSolutions",
+    "approx_eval_moves",
     "batch_evaluate",
     "pack_solutions",
     "STRATEGIES",
@@ -65,12 +86,14 @@ __all__ = [
     "load_balance",
     "memory_update",
     "Move",
+    "MultiWalkResult",
     "TSEvent",
     "TSParams",
     "TSResult",
     "apply_move",
     "critical_blocks",
     "tabu_search",
+    "tabu_multiwalk",
     "brute_force_optimum",
     "build_ilp",
     "Budget",

@@ -33,7 +33,7 @@ from .load_balance import load_balance
 from .mdfg import Instance
 from .memory_update import memory_update
 from .solution import Solution, exact_schedule, memory_feasible
-from .tabu import TSEvent, TSParams, tabu_search
+from .tabu import TSEvent, TSParams, tabu_multiwalk, tabu_search
 
 __all__ = [
     "Budget",
@@ -346,6 +346,85 @@ def _solve_tabu(
     )
 
 
+@register_solver("tabu_multiwalk")
+def _solve_tabu_multiwalk(
+    inst: Instance,
+    *,
+    budget: Budget,
+    seed: int | None,
+    callbacks: Callbacks,
+    walks: int = 8,
+    init: Union[Solution, str, None] = None,
+    inits: list[Solution] | None = None,
+    params: TSParams | None = None,
+    backend: str | None = None,
+) -> SolveReport:
+    """W independent tabu walks in lock-step on the packed array state
+    (``tabu.tabu_multiwalk``), sharing one exact-evaluation batch per round
+    and the whole budget.
+
+    Walk 0 starts exactly like ``solve(inst, "tabu", init=..., seed=...)``
+    (so ``walks=1`` reproduces that trajectory); walks 1..W-1 cycle through
+    the §V-B construction strategies with per-walk seeds.  ``inits`` passes
+    explicit start solutions instead (``walks`` is then ignored) — the
+    portfolio uses this to continue from its best distinct incumbents.
+    """
+    t0 = time.monotonic()
+    params = params or TSParams()
+    if backend is not None:
+        params = dataclasses.replace(params, backend=backend)
+    seed = params.seed if seed is None else seed
+    if inits is not None:
+        if not inits:
+            raise ValueError("inits must be non-empty when given")
+        init_sols = list(inits)
+        labels = [f"explicit{i}" for i in range(len(init_sols))]
+    else:
+        if walks < 1:
+            raise ValueError("walks must be >= 1")
+        init_sols = [_resolve_init(inst, init, seed)]
+        labels = [init if isinstance(init, str)
+                  else ("explicit" if isinstance(init, Solution) else "slack_first")]
+        for w in range(1, walks):
+            strategy = STRATEGIES[w % len(STRATEGIES)]
+            init_sols.append(construct_greedy(inst, strategy, rng=seed + w))
+            labels.append(f"{strategy}@{seed + w}")
+    res = tabu_multiwalk(
+        inst,
+        init_sols,
+        _budgeted_ts_params(params, budget, seed),
+        init_labels=labels,
+        on_iteration=callbacks.on_iteration,
+        on_improvement=callbacks.on_improvement,
+    )
+    sched = exact_schedule(inst, res.best)
+    assert sched is not None
+    return SolveReport(
+        method="tabu_multiwalk",
+        solution=res.best,
+        makespan=res.best_makespan,
+        feasible=memory_feasible(inst, res.best, sched),
+        initial_makespan=res.initial_makespan,
+        iterations=res.iterations,
+        n_exact_evals=res.n_exact_evals,
+        n_approx_evals=res.n_approx_evals,
+        wall_time=time.monotonic() - t0,
+        history=res.history,
+        stop_reason=res.stop_reason,
+        extras={
+            "walks": res.walks,
+            "per_walk": [
+                {"init": wi.init_label,
+                 "initial_makespan": wi.initial_makespan,
+                 "best_makespan": wi.best_makespan,
+                 "solution": wi.best,
+                 "history": wi.history}
+                for wi in res.per_walk
+            ],
+        },
+    )
+
+
 @register_solver("ilp_brute_force")
 def _solve_brute_force(
     inst: Instance,
@@ -395,13 +474,16 @@ def _solve_portfolio(
     backend: str | None = None,
 ) -> SolveReport:
     """Anytime portfolio: run every constructive method, then spend the
-    remaining budget on tabu legs started from the best distinct incumbents.
+    remaining budget on one ``tabu_multiwalk`` leg whose walks start from the
+    best distinct incumbents (they advance in lock-step and share one exact
+    evaluation batch per round, instead of running sequential split-budget
+    legs).
 
     By construction the returned makespan is ≤ every constructive method it
-    ran, and ≤ its own tabu legs' inits — the whole-budget answer to "which
+    ran, and ≤ its own tabu walks' inits — the whole-budget answer to "which
     solver should I use for this scenario?".
 
-    ``backend`` selects the tabu legs' batched evaluation engine; the final
+    ``backend`` selects the tabu walks' batched evaluation engine; the final
     cross-leg verification always runs the batched NumPy reference path (one
     call over all incumbents, bit-exact with the scalar oracle).
     """
@@ -444,8 +526,8 @@ def _solve_portfolio(
     incumbents.sort(key=lambda t: t[0])
     initial_mk = incumbents[0][0] if incumbents else np.inf
 
-    # tabu legs from the best distinct constructive incumbents, sharing what
-    # is left of the budget equally
+    # tabu walks from the best distinct constructive incumbents, advancing in
+    # lock-step on what is left of the budget (one multiwalk leg)
     if stop_reason == "completed" and n_tabu_starts > 0:
         seen_mks: set[float] = set()
         starts: list[tuple[str, Solution]] = []
@@ -457,19 +539,16 @@ def _solve_portfolio(
             starts.append((m, sol))
             if len(starts) >= n_tabu_starts:
                 break
-        leg_budget = budget.remaining(
-            t0, iters_spent=iters, evals_spent=n_exact
-        ).split(len(starts))
-        for m, init_sol in starts:
-            rep = solve(inst, "tabu", budget=leg_budget, seed=seed,
-                        callbacks=callbacks, init=init_sol, params=params,
-                        backend=backend)
-            per_method[f"tabu@{m}"] = rep.makespan
-            incumbents.append((rep.makespan, f"tabu@{m}", rep.solution))
-            _absorb(rep)
-            if rep.stop_reason == "callback":
-                stop_reason = "callback"
-                break
+        leg_budget = budget.remaining(t0, iters_spent=iters, evals_spent=n_exact)
+        rep = solve(inst, "tabu_multiwalk", budget=leg_budget, seed=seed,
+                    callbacks=callbacks, inits=[sol for _, sol in starts],
+                    params=params, backend=backend)
+        for (m, _), wi in zip(starts, rep.extras["per_walk"]):
+            per_method[f"tabu@{m}"] = wi["best_makespan"]
+            incumbents.append((wi["best_makespan"], f"tabu@{m}", wi["solution"]))
+        _absorb(rep)
+        if rep.stop_reason == "callback":
+            stop_reason = "callback"
 
     incumbents.sort(key=lambda t: t[0])
     best_mk, best_method, best_sol = incumbents[0]

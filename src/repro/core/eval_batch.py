@@ -39,6 +39,7 @@ from typing import Sequence
 import numpy as np
 
 from .mdfg import Instance
+from .solution import _EPS  # critical-slack tolerance, shared with heads_tails
 from .solution import (
     Schedule,
     Solution,
@@ -50,38 +51,213 @@ from .solution import (
 
 __all__ = [
     "BACKENDS",
+    "APPROX_WINDOW",
     "BatchEval",
     "BatchEvaluator",
+    "MoveBatch",
     "PackedSolutions",
+    "approx_eval_moves",
     "pack_solutions",
     "batch_evaluate",
 ]
 
 BACKENDS = ("numpy", "jax", "scalar")
 
-_EPS = 1e-9  # mirrors solution._EPS (critical-slack tolerance)
+APPROX_WINDOW = 12  # approximate-evaluation look-ahead window (ops)
 
 
 # --------------------------------------------------------------------------- #
 # packing                                                                      #
 # --------------------------------------------------------------------------- #
 @dataclasses.dataclass
+class MoveBatch:
+    """M neighborhood moves in array form (struct-of-arrays ``tabu.Move``).
+
+    ``cc[i]`` is True for change-core moves (different destination core) and
+    False for N7 repositionings on the same core; ``dst_pos`` is the insertion
+    index in the destination sequence *after* removal, as in ``tabu.Move``.
+    """
+
+    cc: np.ndarray        # (M,) bool
+    task: np.ndarray      # (M,) int64
+    src_proc: np.ndarray  # (M,) int64
+    src_pos: np.ndarray   # (M,) int64
+    dst_proc: np.ndarray  # (M,) int64
+    dst_pos: np.ndarray   # (M,) int64
+
+    def __len__(self) -> int:
+        return len(self.task)
+
+    def take(self, idx) -> "MoveBatch":
+        return MoveBatch(self.cc[idx], self.task[idx], self.src_proc[idx],
+                         self.src_pos[idx], self.dst_proc[idx], self.dst_pos[idx])
+
+    @classmethod
+    def concat(cls, batches: Sequence["MoveBatch"]) -> "MoveBatch":
+        batches = [b for b in batches if len(b)]
+        if not batches:
+            return cls.empty()
+        return cls(*(np.concatenate([getattr(b, f.name) for b in batches])
+                     for f in dataclasses.fields(cls)))
+
+    @classmethod
+    def empty(cls) -> "MoveBatch":
+        z = np.zeros(0, dtype=np.int64)
+        return cls(np.zeros(0, dtype=bool), z, z, z, z, z)
+
+
+@dataclasses.dataclass
 class PackedSolutions:
-    """Array form of K candidate solutions.
+    """Array form of K solutions — and, with ``seq`` present, a first-class
+    mutable array-native *search state*.
 
     ``mpred``/``msucc`` are the disjunctive (machine-order) predecessor and
     successor of each task (-1 = none), i.e. ``Solution.machine_pred_succ``
-    stacked over candidates.
+    stacked over candidates.  ``seq`` is the padded per-processor order
+    ``(K, n_procs, n_tasks + 1)`` (-1 padded; the spare column keeps
+    index arithmetic in bounds for end-of-sequence insertions) with
+    ``seq_len`` the live prefix lengths.  Candidate generation
+    (:meth:`apply_moves`) and move commits (:meth:`commit_move`) are pure
+    gather/scatter — no Python list surgery, no per-candidate ``copy()``.
     """
 
     assign: np.ndarray   # (K, n_tasks) int64
     mem: np.ndarray      # (K, n_data) int64
     mpred: np.ndarray    # (K, n_tasks) int64
     msucc: np.ndarray    # (K, n_tasks) int64
+    seq: np.ndarray | None = None      # (K, n_procs, n_tasks + 1) int64, -1 pad
+    seq_len: np.ndarray | None = None  # (K, n_procs) int64
 
     @property
     def k(self) -> int:
         return self.assign.shape[0]
+
+    # -- construction ------------------------------------------------------- #
+    @classmethod
+    def from_solutions(cls, inst: Instance, sols: Sequence[Solution]) -> "PackedSolutions":
+        """Pack solutions *with* the padded machine-sequence state."""
+        packed = pack_solutions(inst, sols)
+        k, n, p = len(sols), inst.n_tasks, inst.n_procs
+        seq = np.full((k, p, n + 1), -1, dtype=np.int64)
+        seq_len = np.zeros((k, p), dtype=np.int64)
+        for i, sol in enumerate(sols):
+            for pp, s in enumerate(sol.proc_seq):
+                seq_len[i, pp] = len(s)
+                if s:
+                    seq[i, pp, : len(s)] = s
+        packed.seq = seq
+        packed.seq_len = seq_len
+        return packed
+
+    def to_solution(self, i: int) -> Solution:
+        """Materialize row ``i`` back into a scalar :class:`Solution`."""
+        assert self.seq is not None, "to_solution needs the seq state"
+        proc_seq = [
+            [int(t) for t in self.seq[i, p, : self.seq_len[i, p]]]
+            for p in range(self.seq.shape[1])
+        ]
+        return Solution(assign=self.assign[i].copy(), mem=self.mem[i].copy(),
+                        proc_seq=proc_seq)
+
+    def set_solution(self, i: int, sol: Solution) -> None:
+        """Overwrite row ``i`` from a scalar solution (assign/mem/seq/links)."""
+        assert self.seq is not None
+        self.assign[i] = sol.assign
+        self.mem[i] = sol.mem
+        self.seq[i] = -1
+        for p, s in enumerate(sol.proc_seq):
+            self.seq_len[i, p] = len(s)
+            if s:
+                self.seq[i, p, : len(s)] = s
+        self._refresh_links(i)
+
+    # -- array-op views ----------------------------------------------------- #
+    def positions(self) -> tuple[np.ndarray, np.ndarray]:
+        """(machine_of_task, position_in_sequence), both (K, n_tasks)."""
+        assert self.seq is not None
+        k, p, s = self.seq.shape
+        n = self.assign.shape[1]
+        mach = np.full((k, n), -1, dtype=np.int64)
+        pos = np.full((k, n), -1, dtype=np.int64)
+        kk, pp, ss = np.nonzero(self.seq >= 0)
+        t = self.seq[kk, pp, ss]
+        mach[kk, t] = pp
+        pos[kk, t] = ss
+        return mach, pos
+
+    def _refresh_links(self, i: int) -> None:
+        """Recompute row ``i``'s mpred/msucc from its seq state."""
+        n = self.assign.shape[1]
+        mp = np.full(n, -1, dtype=np.int64)
+        ms = np.full(n, -1, dtype=np.int64)
+        for p in range(self.seq.shape[1]):
+            lp = int(self.seq_len[i, p])
+            if lp >= 2:
+                s = self.seq[i, p, :lp]
+                mp[s[1:]] = s[:-1]
+                ms[s[:-1]] = s[1:]
+        self.mpred[i] = mp
+        self.msucc[i] = ms
+
+    # -- vectorized move application ---------------------------------------- #
+    def apply_moves(self, rows: np.ndarray, mb: MoveBatch) -> "PackedSolutions":
+        """Materialize M candidate solutions — ``rows[i]``'s state with
+        ``mb``'s i-th move applied — as a new :class:`PackedSolutions`
+        (without seq state; the batch engine only needs assign/mem/links).
+
+        Pure gather/scatter: each candidate's ``mpred``/``msucc`` start as a
+        copy of its source row and receive the O(1) local link edits of the
+        remove + insert, exactly mirroring ``tabu.apply_move``'s list surgery.
+        """
+        assert self.seq is not None
+        m = len(mb)
+        u, k, b, j = mb.task, mb.src_pos, mb.dst_proc, mb.dst_pos
+        same = ~mb.cc  # N7 moves stay on the source core
+        assign = self.assign[rows]
+        mem = self.mem[rows]
+        mpred = self.mpred[rows]
+        msucc = self.msucc[rows]
+        ar = np.arange(m)
+        # unlink u: machine-pred x and machine-succ y become adjacent
+        x = self.mpred[rows, u]
+        y = self.msucc[rows, u]
+        sel = x >= 0
+        msucc[ar[sel], x[sel]] = y[sel]
+        sel = y >= 0
+        mpred[ar[sel], y[sel]] = x[sel]
+        # insertion neighbors in the destination sequence AFTER removal:
+        # positions >= src_pos shift down by one on the source core
+        dseq = self.seq[rows, b]                       # (M, S)
+        len_dst = self.seq_len[rows, b] - same
+        pi = j - 1
+        pio = pi + (same & (pi >= k))
+        pred_t = np.where(pi >= 0, dseq[ar, np.maximum(pio, 0)], -1)
+        sio = j + (same & (j >= k))
+        succ_t = np.where(j < len_dst, dseq[ar, np.minimum(sio, dseq.shape[1] - 1)], -1)
+        mpred[ar, u] = pred_t
+        msucc[ar, u] = succ_t
+        sel = pred_t >= 0
+        msucc[ar[sel], pred_t[sel]] = u[sel]
+        sel = succ_t >= 0
+        mpred[ar[sel], succ_t[sel]] = u[sel]
+        assign[ar, u] = b
+        return PackedSolutions(assign=assign, mem=mem, mpred=mpred, msucc=msucc)
+
+    def commit_move(self, i: int, mv) -> None:
+        """Apply one accepted move to walk row ``i`` in place (seq splice via
+        slice scatter + link refresh) — the packed ``tabu.apply_move``."""
+        assert self.seq is not None
+        src = self.seq[i, mv.src_proc]
+        assert src[mv.src_pos] == mv.task
+        src[mv.src_pos:-1] = src[mv.src_pos + 1:].copy()
+        src[-1] = -1
+        self.seq_len[i, mv.src_proc] -= 1
+        dst = self.seq[i, mv.dst_proc]
+        dst[mv.dst_pos + 1:] = dst[mv.dst_pos:-1].copy()
+        dst[mv.dst_pos] = mv.task
+        self.seq_len[i, mv.dst_proc] += 1
+        self.assign[i, mv.task] = mv.dst_proc
+        self._refresh_links(i)
 
 
 def pack_solutions(inst: Instance, sols: Sequence[Solution]) -> PackedSolutions:
@@ -206,6 +382,16 @@ class BatchEvaluator:
         if peaks:
             out.peaks, out.mem_ok = self._memory_peaks(packed, start, finish, feasible)
         return out
+
+    def backward_tails(self, packed: PackedSolutions, dur: np.ndarray,
+                       feasible: np.ndarray | None = None) -> np.ndarray:
+        """Tails Q (Eq. 28) for already-scheduled states: the batched
+        backward sweep alone, given per-row durations.  Bit-exact with the
+        scalar ``heads_tails`` Q (pure max reductions over the same
+        operands) on every backend."""
+        if feasible is None:
+            feasible = np.ones(packed.k, dtype=bool)
+        return self._backward_q(packed, dur, feasible)
 
     # -- scalar oracle ------------------------------------------------------ #
     def _evaluate_scalar(self, sols: Sequence[Solution], *, tails: bool, peaks: bool) -> BatchEval:
@@ -426,6 +612,138 @@ def _expand_edges(indptr: np.ndarray, idx: np.ndarray, rk: np.ndarray,
     cum = np.cumsum(counts)
     flat = np.arange(total) + np.repeat(indptr[ru] - (cum - counts), counts)
     return np.repeat(rk, counts), idx[flat], np.repeat(vals, counts)
+
+
+# --------------------------------------------------------------------------- #
+# batched approximate evaluation (mixed strategy §V-F, fast path)              #
+# --------------------------------------------------------------------------- #
+def _sequential_segment_sums(vals: np.ndarray, loc: np.ndarray, counts: np.ndarray,
+                             m: int) -> np.ndarray:
+    """Per-segment *sequential* sums: segment i's values (rows ``loc == i`` of
+    ``vals``, in order) accumulated left-to-right via a padded row cumsum —
+    the same float op order as ``np.cumsum(segment)[-1]`` (trailing zeros add
+    exactly), so the scalar oracle can replay it bit-for-bit."""
+    width = int(counts.max()) if len(counts) else 0
+    if width == 0 or len(vals) == 0:
+        return np.zeros(m)
+    starts = np.cumsum(counts) - counts
+    pos = np.arange(len(vals)) - np.repeat(starts, counts)
+    padded = np.zeros((m, width))
+    padded[loc, pos] = vals
+    return np.cumsum(padded, axis=1)[:, -1]
+
+
+def _reprice_io(inst: Instance, mem: np.ndarray, tasks: np.ndarray,
+                procs: np.ndarray, indptr: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """Move-in/move-out time of ``tasks`` re-priced on ``procs`` under the
+    current allocation ``mem`` — the vectorized AT lookup for change-core
+    moves (sum of ``size(d) * AT(proc, Mem(d))`` over the task's CSR blocks)."""
+    m = len(tasks)
+    loc, blocks, _ = _expand_edges(indptr, idx, np.arange(m), tasks, np.zeros(m))
+    vals = inst.data_size[blocks] * inst.access_time[procs[loc], mem[blocks]]
+    counts = indptr[tasks + 1] - indptr[tasks]
+    return _sequential_segment_sums(vals, loc, counts, m)
+
+
+def _new_seq_at(seq_dst: np.ndarray, u: np.ndarray, j: np.ndarray, k: np.ndarray,
+                cc: np.ndarray, i: np.ndarray) -> np.ndarray:
+    """Element ``i`` of each move's post-move destination sequence.
+
+    The post-move sequence is the destination order with ``u`` removed at
+    ``k`` (same-core moves only) and re-inserted at ``j``; instead of
+    materializing it, index arithmetic maps ``i`` back to the original
+    padded row ``seq_dst`` (the spare pad column keeps gathers in bounds).
+    """
+    t = i - (i > j)
+    orig = t + (~cc & (t >= k))
+    return np.where(i == j, u, seq_dst[np.arange(len(i)), orig])
+
+
+def approx_eval_moves(
+    inst: Instance,
+    packed: PackedSolutions,
+    row: int,
+    mb: MoveBatch,
+    r: np.ndarray,
+    q: np.ndarray,
+    dur: np.ndarray,
+) -> np.ndarray:
+    """Head/tail window estimates for all M moves of one walk in one pass.
+
+    Array-parallel replay of ``tabu._approx_eval``: heads are recomputed
+    along the affected window of each move's destination sequence (old heads
+    elsewhere) and ``C'max`` is estimated as ``max R'(x) + Q_old(x)`` over
+    the recomputed ops.  Bit-exact with the scalar oracle (``array_equal``):
+    every float op is a max / add over identical operands, and change-core
+    duration re-pricing replays the scalar sequential summation order.
+    Returns ``np.inf`` for moves onto incompatible cores.
+    """
+    m = len(mb)
+    if m == 0:
+        return np.zeros(0)
+    u, k, b, j, cc = mb.task, mb.src_pos, mb.dst_proc, mb.dst_pos, mb.cc
+    mem = packed.mem[row]
+    seq_dst = packed.seq[row][b]                     # (M, S) destination rows
+    # --- duration re-pricing for change-core moves (vectorized AT lookup) --- #
+    dur_u = dur[u].copy()
+    q_u = q[u].copy()
+    if cc.any():
+        ci = np.nonzero(cc)[0]
+        t_in = _reprice_io(inst, mem, u[ci], b[ci], inst.in_indptr, inst.in_idx)
+        t_out = _reprice_io(inst, mem, u[ci], b[ci], inst.out_indptr, inst.out_idx)
+        d_cc = t_in + inst.proc_time[u[ci], b[ci]] + t_out
+        dur_u[ci] = d_cc
+        q_u[ci] = q[u[ci]] - dur[u[ci]] + d_cc
+    finite = np.isfinite(dur_u)
+    # --- window bounds ------------------------------------------------------ #
+    new_len = packed.seq_len[row][b] + cc            # same length for N7, +1 for cc
+    w_lo = np.where(cc, j, np.minimum(k, j))
+    w_hi = np.minimum(new_len, w_lo + APPROX_WINDOW)
+    est = np.zeros(m)
+    prev_finish = np.zeros(m)
+    has_prev = w_lo > 0
+    if has_prev.any():
+        xp = seq_dst[has_prev, w_lo[has_prev] - 1]   # before both splice points
+        prev_finish[has_prev] = r[xp] + dur[xp]
+    # window tasks recomputed so far and their new heads (the scalar new_r)
+    win_tasks = np.full((m, APPROX_WINDOW), -1, dtype=np.int64)
+    win_heads = np.zeros((m, APPROX_WINDOW))
+    for s in range(APPROX_WINDOW):
+        idx = w_lo + s
+        active = idx < w_hi
+        if not active.any():
+            break
+        am = np.nonzero(active)[0]
+        x = _new_seq_at(seq_dst[am], u[am], j[am], k[am], cc[am], idx[am])
+        head = prev_finish[am].copy()
+        loc, pj, _ = _expand_edges(inst.pred_indptr, inst.pred_idx,
+                                   np.arange(len(am)), x, np.zeros(len(am)))
+        if len(pj):
+            f = r[pj] + dur[pj]                      # default: old head + dur
+            gm = am[loc]
+            for t in range(s):                       # preds recomputed in-window
+                hit = win_tasks[gm, t] == pj
+                if hit.any():
+                    hh = np.nonzero(hit)[0]
+                    gmh, pjh = gm[hh], pj[hh]
+                    f[hh] = win_heads[gmh, t] + np.where(
+                        pjh == u[gmh], dur_u[gmh], dur[pjh])
+            np.maximum.at(head, loc, f)
+        win_tasks[am, s] = x
+        win_heads[am, s] = head
+        is_u = x == u[am]
+        dx = np.where(is_u, dur_u[am], dur[x])
+        qx = np.where(is_u, q_u[am], q[x])
+        est[am] = np.maximum(est[am], head + qx)
+        prev_finish[am] = head + dx
+    # ops past the window keep old tails; account the window exit edge
+    tail = w_hi < new_len
+    if tail.any():
+        tm = np.nonzero(tail)[0]
+        x = _new_seq_at(seq_dst[tm], u[tm], j[tm], k[tm], cc[tm], w_hi[tm])
+        est[tm] = np.maximum(est[tm], prev_finish[tm] + q[x])
+    est[~finite] = np.inf
+    return est
 
 
 # --------------------------------------------------------------------------- #

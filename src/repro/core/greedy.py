@@ -12,7 +12,7 @@ import dataclasses
 
 import numpy as np
 
-from .mdfg import Instance
+from .mdfg import InfeasibleInstanceError, Instance
 from .solution import Solution
 
 __all__ = ["construct_greedy", "GreedyState", "STRATEGIES"]
@@ -108,9 +108,11 @@ def _try_alloc_outputs(
     tentative: dict[int, list[list[float]]] = {}
     for d in outs:
         placed = None
+        tried = []
         for m in order:
             if not inst.data_mem_ok[d, m]:
                 continue
+            tried.append(int(m))
             if np.isinf(inst.mem_cap[m]):
                 placed = int(m)
                 break
@@ -118,7 +120,13 @@ def _try_alloc_outputs(
             if _peak_with(pool, start, inst.data_size[d]) <= inst.mem_cap[m]:
                 placed = int(m)
                 break
-        assert placed is not None
+        if placed is None:
+            raise InfeasibleInstanceError(
+                f"no memory tier can hold block {d} (size {inst.data_size[d]:g}) "
+                f"produced by task {task} at t={start:g}; compatible tiers tried: "
+                f"{tried or 'none'}",
+                block=d, task=task, tiers_tried=tuple(tried),
+            )
         choice[d] = placed
         if commit:
             state.intervals[placed].append([start, np.inf, float(inst.data_size[d])])
@@ -168,12 +176,13 @@ def construct_greedy(
         interval_of_block={},
     )
     # initial input data (producer = -1): allocate up front, alive from t=0
-    slack0 = np.zeros(n)
     for d in np.nonzero(inst.producer < 0)[0]:
         order = np.argsort(inst.mem_level)
+        tried = []
         for m in order:
             if not inst.data_mem_ok[d, m]:
                 continue
+            tried.append(int(m))
             if np.isinf(inst.mem_cap[m]) or _peak_with(
                 state.intervals[m], 0.0, inst.data_size[d]
             ) <= inst.mem_cap[m]:
@@ -181,6 +190,13 @@ def construct_greedy(
                 state.intervals[m].append([0.0, np.inf, float(inst.data_size[d])])
                 state.interval_of_block[int(d)] = (int(m), len(state.intervals[m]) - 1)
                 break
+        else:
+            raise InfeasibleInstanceError(
+                f"no memory tier can hold initial-input block {d} "
+                f"(size {inst.data_size[d]:g}, alive from t=0); compatible tiers "
+                f"tried: {tried or 'none'}",
+                block=int(d), task=-1, tiers_tried=tuple(tried),
+            )
 
     n_sched_preds = np.zeros(n, dtype=np.int64)
     n_preds = np.diff(inst.pred_indptr)

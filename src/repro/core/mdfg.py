@@ -23,10 +23,29 @@ from typing import Sequence
 import numpy as np
 
 __all__ = [
+    "InfeasibleInstanceError",
     "Instance",
     "random_instance",
     "validate_instance",
 ]
+
+
+class InfeasibleInstanceError(RuntimeError):
+    """No feasible placement exists for a data block.
+
+    Raised by the constructors when a block fits in none of its compatible
+    memory tiers (typically an instance without an unbounded fallback tier —
+    ``validate_instance`` would have rejected it up front).  Carries the
+    offending block, the producing task (-1 for initial inputs), and the
+    tiers that were tried, so callers can report *which* constraint broke.
+    """
+
+    def __init__(self, message: str, *, block: int, task: int,
+                 tiers_tried: tuple[int, ...] = ()):
+        super().__init__(message)
+        self.block = int(block)
+        self.task = int(task)
+        self.tiers_tried = tuple(int(t) for t in tiers_tried)
 
 
 def _csr(n_src: int, pairs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:

@@ -8,6 +8,22 @@ never exceeded over the block's lifetime (checked with the discretized
 differential array).  The schedule / critical path is recomputed every
 ``refresh_every`` placements (=1 reproduces the paper exactly; >1 is the
 amortized mode used inside the tabu loop).
+
+Two implementations share these semantics:
+
+* the **fast path** (default) — criticalities for *all* pending blocks come
+  from one segment sum per refresh, the most-critical-first pop order is a
+  single lexsort over ``(-uses, size, d)`` (valid because criticality only
+  changes at refreshes), and the per-placement capacity probe is a
+  lexsort + cumsum over the tier's event arrays;
+* the **scalar oracle** (``scalar=True``) — the original per-block Python
+  loops, kept as the parity reference and the PR-2-faithful baseline for
+  ``benchmarks/search_bench.py``.
+
+Both produce the same allocation: the pop order replays the scalar argmin
+key exactly, and the capacity probe accumulates the same event deltas in the
+same sorted order (ties in ``(time, Δ)`` carry equal deltas, so any stable
+order yields identical prefix sums).
 """
 from __future__ import annotations
 
@@ -54,8 +70,130 @@ def memory_update(
     inst: Instance,
     sol: Solution,
     refresh_every: int = 8,
+    *,
+    scalar: bool = False,
 ) -> Solution:
-    """Returns a copy of ``sol`` with ``mem`` rebuilt (Alg. 3)."""
+    """Returns a copy of ``sol`` with ``mem`` rebuilt (Alg. 3).
+
+    ``scalar=True`` selects the original per-block Python implementation
+    (the parity oracle / benchmark baseline); the default fast path computes
+    the identical allocation with array sweeps.
+    """
+    if scalar:
+        return _memory_update_scalar(inst, sol, refresh_every)
+    return _memory_update_fast(inst, sol, refresh_every)
+
+
+# --------------------------------------------------------------------------- #
+# fast path                                                                    #
+# --------------------------------------------------------------------------- #
+def _block_uses(inst: Instance, crit: np.ndarray) -> np.ndarray:
+    """Criticality of every block: #critical producers + #critical consumers."""
+    uses = np.zeros(inst.n_data, dtype=np.int64)
+    prod = inst.producer
+    has = prod >= 0
+    uses[has] = crit[prod[has]].astype(np.int64)
+    if inst.cons_idx.size:
+        c = np.zeros(len(inst.cons_idx) + 1, dtype=np.int64)
+        np.cumsum(crit[inst.cons_idx].astype(np.int64), out=c[1:])
+        uses += c[inst.cons_indptr[1:]] - c[inst.cons_indptr[:-1]]
+    return uses
+
+
+def _tier_event_arrays(
+    inst: Instance, sol: Solution, birth: np.ndarray, death: np.ndarray
+) -> tuple[list[np.ndarray], list[np.ndarray]]:
+    """Per-tier (times, deltas) arrays in the scalar append order
+    (d ascending, birth before death)."""
+    times: list[np.ndarray] = []
+    deltas: list[np.ndarray] = []
+    finite = ~np.isinf(inst.mem_cap)
+    for m in range(inst.n_mems):
+        if not finite[m]:
+            times.append(np.zeros(0))
+            deltas.append(np.zeros(0))
+            continue
+        sel = np.nonzero(sol.mem == m)[0]
+        t = np.empty(2 * len(sel))
+        dl = np.empty(2 * len(sel))
+        t[0::2] = birth[sel]
+        t[1::2] = death[sel]
+        dl[0::2] = inst.data_size[sel]
+        dl[1::2] = -inst.data_size[sel]
+        times.append(t)
+        deltas.append(dl)
+    return times, deltas
+
+
+def _fits_fast(times: np.ndarray, deltas: np.ndarray, b: float, e: float,
+               size: float, cap: float) -> bool:
+    t = np.append(times, (b, e))
+    dl = np.append(deltas, (size, -size))
+    run = np.cumsum(dl[np.lexsort((dl, t))])
+    return not bool((run > cap + 1e-9).any())
+
+
+def _memory_update_fast(inst: Instance, sol: Solution, refresh_every: int) -> Solution:
+    sol = sol.copy()
+    # line 3: InitMemory — slowest compatible tier for every block
+    slow_rank = np.argsort(-inst.mem_level)
+    ok = inst.data_mem_ok[:, slow_rank]
+    any_ok = ok.any(axis=1)
+    sol.mem[any_ok] = slow_rank[np.argmax(ok[any_ok], axis=1)]
+
+    fast_order = [int(m) for m in np.argsort(inst.mem_level) if not np.isinf(inst.mem_cap[m])]
+    if not fast_order:
+        return sol
+    # only blocks that *can* live in a finite (fast) tier are candidates
+    cand_mask = inst.data_mem_ok[:, fast_order].any(axis=1)
+
+    sched = exact_schedule(inst, sol)
+    assert sched is not None, "memory_update requires an acyclic solution"
+    _, _, _, crit = heads_tails(inst, sol, sched)
+    birth, death = data_lifetimes(inst, sched)
+    times, deltas = _tier_event_arrays(inst, sol, birth, death)
+    sizes = inst.data_size
+
+    def pop_order(pending: np.ndarray, uses: np.ndarray) -> np.ndarray:
+        # the scalar argmin key (-uses, size, d), replayed as one lexsort —
+        # exact because uses/size are fixed between refreshes
+        return pending[np.lexsort((pending, sizes[pending], -uses[pending]))]
+
+    pending = np.nonzero(cand_mask)[0]
+    order = pop_order(pending, _block_uses(inst, crit))
+    cursor = 0
+    placed_since_refresh = 0
+    while cursor < len(order):
+        d = int(order[cursor])
+        cursor += 1
+        for m in fast_order:
+            if not inst.data_mem_ok[d, m]:
+                continue
+            if _fits_fast(times[m], deltas[m], birth[d], death[d],
+                          float(sizes[d]), float(inst.mem_cap[m])):
+                sol.mem[d] = m
+                times[m] = np.append(times[m], (birth[d], death[d]))
+                deltas[m] = np.append(deltas[m], (sizes[d], -sizes[d]))
+                placed_since_refresh += 1
+                break
+        # else: stays in the slow tier (always feasible)
+
+        if placed_since_refresh >= refresh_every and cursor < len(order):
+            placed_since_refresh = 0
+            sched = exact_schedule(inst, sol)
+            assert sched is not None
+            _, _, _, crit = heads_tails(inst, sol, sched)
+            birth, death = data_lifetimes(inst, sched)
+            times, deltas = _tier_event_arrays(inst, sol, birth, death)
+            order = pop_order(order[cursor:], _block_uses(inst, crit))
+            cursor = 0
+    return sol
+
+
+# --------------------------------------------------------------------------- #
+# scalar oracle (the original implementation, kept verbatim)                   #
+# --------------------------------------------------------------------------- #
+def _memory_update_scalar(inst: Instance, sol: Solution, refresh_every: int) -> Solution:
     sol = sol.copy()
     # line 3: InitMemory — slowest compatible tier for every block
     slow_rank = np.argsort(-inst.mem_level)

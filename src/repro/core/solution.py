@@ -60,20 +60,21 @@ class Solution:
         mach = np.full(n_tasks, -1, dtype=np.int64)
         pos = np.full(n_tasks, -1, dtype=np.int64)
         for p, seq in enumerate(self.proc_seq):
-            for k, t in enumerate(seq):
-                mach[t] = p
-                pos[t] = k
+            if seq:
+                s = np.asarray(seq, dtype=np.int64)
+                mach[s] = p
+                pos[s] = np.arange(len(s))
         return mach, pos
 
     def machine_pred_succ(self, n_tasks: int) -> tuple[np.ndarray, np.ndarray]:
         mp = np.full(n_tasks, -1, dtype=np.int64)
         ms = np.full(n_tasks, -1, dtype=np.int64)
         for seq in self.proc_seq:
-            for k, t in enumerate(seq):
-                if k > 0:
-                    mp[t] = seq[k - 1]
-                if k + 1 < len(seq):
-                    ms[t] = seq[k + 1]
+            if len(seq) < 2:
+                continue
+            s = np.asarray(seq, dtype=np.int64)
+            mp[s[1:]] = s[:-1]
+            ms[s[:-1]] = s[1:]
         return mp, ms
 
 
@@ -174,16 +175,16 @@ def data_lifetimes(inst: Instance, sched: Schedule) -> tuple[np.ndarray, np.ndar
     """Block lifetime [birth, death): birth = producer start (move-in begins),
     death = last consumer finish (paper §IV-C); initial inputs live from t=0;
     producer finish if unconsumed."""
+    prod = inst.producer
+    has_prod = prod >= 0
     birth = np.zeros(inst.n_data)
-    death = np.zeros(inst.n_data)
-    for d in range(inst.n_data):
-        p = inst.producer[d]
-        birth[d] = 0.0 if p < 0 else sched.start[p]
-        cons = inst.cons_idx[inst.cons_indptr[d] : inst.cons_indptr[d + 1]]
-        if len(cons):
-            death[d] = sched.finish[cons].max()
-        else:
-            death[d] = birth[d] if p < 0 else sched.finish[p]
+    birth[has_prod] = sched.start[prod[has_prod]]
+    death = np.where(has_prod, sched.finish[np.where(has_prod, prod, 0)], birth)
+    if inst.cons_idx.size:
+        n_cons = np.diff(inst.cons_indptr)
+        dmax = np.full(inst.n_data, -np.inf)
+        np.maximum.at(dmax, np.repeat(np.arange(inst.n_data), n_cons), sched.finish[inst.cons_idx])
+        death = np.where(n_cons > 0, dmax, death)
     return birth, death
 
 

@@ -6,14 +6,27 @@ the same machine) and **change-core** (k-insertion onto another compatible
 core) — while the inner layer re-allocates memory with Algorithm 3 after each
 accepted move.  Neighbors are ranked with a cheap *approximate evaluation*
 (head/tail window estimate); only the top-K are *exactly* evaluated (full DP)
-— the paper's mixed evaluation strategy (§V-F).  The exact stage runs on the
-batched array-level engine (``eval_batch.BatchEvaluator``): top-K candidates
-are evaluated per chunk in one ``(K, n_tasks)`` DP instead of K Python-loop
-DPs; ``TSParams.backend`` selects the NumPy reference path (default), the
-``jax.jit`` path, or the per-candidate scalar oracle.  Move attributes are tabu for
+— the paper's mixed evaluation strategy (§V-F).  Move attributes are tabu for
 θ1 = m + rand()%(2m) (change-core) / θ2 = n + rand()%n (N7) iterations, with
 the standard aspiration criterion (a tabu move is admissible when it improves
 the best known makespan).
+
+Two search drivers share these semantics:
+
+* :func:`tabu_search` — the scalar-loop reference implementation (one walk,
+  per-move Python objects, per-candidate ``Solution.copy``).  Its exact stage
+  already runs on the batched engine; it remains the parity oracle and the
+  baseline for ``benchmarks/search_bench.py``.
+* :func:`tabu_multiwalk` — the array-native engine: W independent walks
+  advance in lock-step on one :class:`~.eval_batch.PackedSolutions` search
+  state.  Neighborhoods are generated as :class:`~.eval_batch.MoveBatch`
+  arrays, approximate evaluation runs as one ``(M,)`` array pass per walk
+  (``eval_batch.approx_eval_moves``), candidates are materialized by
+  gather/scatter ``apply_moves`` (no per-candidate copies), and all walks'
+  top-K chunks share one ``(W·K, n_tasks)`` exact-evaluation batch per
+  round.  Each walk keeps its own tabu table, aspiration, and RNG stream;
+  with ``W=1`` the trajectory (history, incumbent, eval counts) reproduces
+  :func:`tabu_search` exactly on both the numpy and scalar backends.
 """
 from __future__ import annotations
 
@@ -22,14 +35,31 @@ import time
 
 import numpy as np
 
-from .eval_batch import BatchEvaluator
+from .eval_batch import (
+    APPROX_WINDOW,
+    BatchEvaluator,
+    MoveBatch,
+    PackedSolutions,
+    _expand_edges,
+    approx_eval_moves,
+)
 from .mdfg import Instance
 from .memory_update import memory_update
-from .solution import Solution, durations, exact_schedule, heads_tails
+from .solution import _EPS  # critical-slack tolerance, shared with heads_tails
+from .solution import Schedule, Solution, exact_schedule, heads_tails
 
-__all__ = ["TSParams", "TSResult", "TSEvent", "tabu_search", "critical_blocks", "Move"]
+__all__ = [
+    "TSParams",
+    "TSResult",
+    "TSEvent",
+    "MultiWalkResult",
+    "tabu_search",
+    "tabu_multiwalk",
+    "critical_blocks",
+    "Move",
+]
 
-_WINDOW = 12  # approximate-evaluation look-ahead window (ops)
+_WINDOW = APPROX_WINDOW  # approximate-evaluation look-ahead window (ops)
 
 
 @dataclasses.dataclass
@@ -45,6 +75,7 @@ class TSParams:
     max_iters: int | None = None       # hard cap on outer iterations
     max_evals: int | None = None       # hard cap on exact schedule evaluations
     backend: str = "numpy"             # exact-eval engine: numpy | jax | scalar
+    mem_update_scalar: bool = False    # Alg-3 scalar oracle (parity/benchmarks)
 
     @classmethod
     def fast(cls, seed: int = 0) -> "TSParams":
@@ -65,6 +96,24 @@ class TSResult:
     n_exact_evals: int = 0
     n_approx_evals: int = 0
     stop_reason: str = "converged"
+
+
+@dataclasses.dataclass
+class WalkInfo:
+    """Per-walk summary attached to :class:`MultiWalkResult`."""
+
+    init_label: str
+    initial_makespan: float
+    best_makespan: float
+    best: Solution
+    history: list[tuple[int, float]]
+    stop_reason: str
+
+
+@dataclasses.dataclass
+class MultiWalkResult(TSResult):
+    walks: int = 1
+    per_walk: list[WalkInfo] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,7 +140,7 @@ class Move:
 
 
 # --------------------------------------------------------------------------- #
-# neighborhood construction                                                    #
+# neighborhood construction (scalar reference)                                 #
 # --------------------------------------------------------------------------- #
 def critical_blocks(sol: Solution, critical: np.ndarray) -> list[tuple[int, int, int]]:
     """Maximal runs of consecutive critical ops per machine: (proc, lo, hi)."""
@@ -162,8 +211,125 @@ def apply_move(sol: Solution, move: Move) -> None:
 
 
 # --------------------------------------------------------------------------- #
-# approximate evaluation (mixed strategy, fast path)                          #
+# neighborhood construction (array-native)                                     #
 # --------------------------------------------------------------------------- #
+def _n7_move_batch(packed: PackedSolutions, row: int, crit: np.ndarray) -> MoveBatch:
+    """Vectorized ``_n7_moves``: critical-block detection as a run-length
+    sweep over the padded sequence matrix, emitting moves in the scalar
+    enumeration order (machine asc, position asc, head-move before tail)."""
+    seq = packed.seq[row]
+    n_p, s_cap = seq.shape
+    valid = np.arange(s_cap)[None, :] < packed.seq_len[row][:, None]
+    c = np.zeros((n_p, s_cap), dtype=bool)
+    c[valid] = crit[seq[valid]]
+    prev = np.zeros_like(c)
+    prev[:, 1:] = c[:, :-1]
+    nxt = np.zeros_like(c)
+    nxt[:, :-1] = c[:, 1:]
+    starts_m = c & ~prev
+    ends_m = c & ~nxt
+    nb = int(starts_m.sum())
+    if nb == 0:
+        return MoveBatch.empty()
+    bid = np.cumsum(starts_m.ravel()).reshape(n_p, s_cap) - 1
+    lo = np.zeros(nb, dtype=np.int64)
+    hi = np.zeros(nb, dtype=np.int64)
+    pp, ss = np.nonzero(starts_m)
+    lo[bid[pp, ss]] = ss
+    pp, ss = np.nonzero(ends_m)
+    hi[bid[pp, ss]] = ss
+    keep = hi - lo >= 1  # maximal runs of length >= 2
+    cp, cs = np.nonzero(c)  # row-major = the scalar (machine, position) scan
+    cb = bid[cp, cs]
+    ok = keep[cb]
+    cp, cs, cb = cp[ok], cs[ok], cb[ok]
+    if not len(cp):
+        return MoveBatch.empty()
+    u = seq[cp, cs]
+    m = len(cp)
+    task = np.repeat(u, 2)
+    src_p = np.repeat(cp, 2)
+    src_s = np.repeat(cs, 2)
+    dst = np.empty(2 * m, dtype=np.int64)
+    dst[0::2] = lo[cb]
+    dst[1::2] = hi[cb]
+    sel = np.empty(2 * m, dtype=bool)
+    sel[0::2] = cs != lo[cb]
+    sel[1::2] = cs != hi[cb]
+    return MoveBatch(cc=np.zeros(int(sel.sum()), dtype=bool), task=task[sel],
+                     src_proc=src_p[sel], src_pos=src_s[sel],
+                     dst_proc=src_p[sel], dst_pos=dst[sel])
+
+
+def _cc_move_batch(
+    inst: Instance,
+    compat_indptr: np.ndarray,
+    compat_idx: np.ndarray,
+    packed: PackedSolutions,
+    row: int,
+    crit: np.ndarray,
+    r: np.ndarray,
+    n_positions: int,
+    mach: np.ndarray,
+    pos: np.ndarray,
+) -> MoveBatch:
+    """Vectorized ``_cc_moves``: (critical task, compatible core) pairs by
+    CSR expansion, insertion anchors by per-machine batched searchsorted.
+
+    ``r`` (the heads, == schedule starts) serves both roles the scalar
+    generator gives it: anchor keys along each destination sequence and the
+    searchsorted query per critical task."""
+    crit_tasks = np.nonzero(crit)[0]
+    if not len(crit_tasks):
+        return MoveBatch.empty()
+    loc, b, _ = _expand_edges(compat_indptr, compat_idx,
+                              np.arange(len(crit_tasks)), crit_tasks,
+                              np.zeros(len(crit_tasks)))
+    u = crit_tasks[loc]
+    a = mach[u]
+    keep = b != a
+    u, b, a = u[keep], b[keep], a[keep]
+    if not len(u):
+        return MoveBatch.empty()
+    seq = packed.seq[row]
+    seq_len = packed.seq_len[row]
+    anchor = np.empty(len(u), dtype=np.int64)
+    for p in range(inst.n_procs):
+        s = np.nonzero(b == p)[0]
+        if not len(s):
+            continue
+        seq_starts = r[seq[p, : seq_len[p]]]
+        anchor[s] = np.searchsorted(seq_starts, r[u[s]])
+    lo = np.maximum(0, anchor - n_positions // 2)
+    hi = np.minimum(seq_len[b], lo + n_positions)
+    cnt = hi - lo + 1  # range(lo, hi + 1) is inclusive of hi
+    tot = int(cnt.sum())
+    jj = np.arange(tot) - np.repeat(np.cumsum(cnt) - cnt, cnt) + np.repeat(lo, cnt)
+    return MoveBatch(cc=np.ones(tot, dtype=bool), task=np.repeat(u, cnt),
+                     src_proc=np.repeat(a, cnt), src_pos=np.repeat(pos[u], cnt),
+                     dst_proc=np.repeat(b, cnt), dst_pos=jj)
+
+
+def _resulting_configs(packed: PackedSolutions, row: int, mb: MoveBatch):
+    """The configuration each move creates — ``(task, dst_proc,
+    machine-pred-after-move)`` with -2 for "head of sequence" — vectorized
+    ``resulting_config`` for the tabu-table lookups."""
+    seq_dst = packed.seq[row][mb.dst_proc]
+    pi = mb.dst_pos - 1
+    pio = pi + (~mb.cc & (pi >= mb.src_pos))
+    pred = np.where(pi >= 0, seq_dst[np.arange(len(mb)), np.maximum(pio, 0)], -2)
+    return mb.task, mb.dst_proc, pred
+
+
+# --------------------------------------------------------------------------- #
+# approximate evaluation (mixed strategy, fast path) — scalar oracle           #
+# --------------------------------------------------------------------------- #
+def _seq_sum(vals: np.ndarray) -> float:
+    """Left-to-right sequential sum — the float op order the batched kernel
+    (`eval_batch.approx_eval_moves`) replays, so parity is ``array_equal``."""
+    return float(np.cumsum(vals)[-1]) if len(vals) else 0.0
+
+
 def _approx_eval(
     inst: Instance,
     sol: Solution,
@@ -171,7 +337,6 @@ def _approx_eval(
     r: np.ndarray,
     q: np.ndarray,
     dur: np.ndarray,
-    makespan: float,
 ) -> float:
     """Head/tail window estimate of the post-move makespan.
 
@@ -194,12 +359,10 @@ def _approx_eval(
         w_lo = move.dst_pos
         # duration changes with the core (t_in/t_out re-priced via AT)
         at = inst.access_time
-        t_in = float(
-            (inst.data_size[inst.inputs(u)] * at[move.dst_proc, sol.mem[inst.inputs(u)]]).sum()
-        )
-        t_out = float(
-            (inst.data_size[inst.outputs(u)] * at[move.dst_proc, sol.mem[inst.outputs(u)]]).sum()
-        )
+        ins = inst.inputs(u)
+        outs = inst.outputs(u)
+        t_in = _seq_sum(inst.data_size[ins] * at[move.dst_proc, sol.mem[ins]])
+        t_out = _seq_sum(inst.data_size[outs] * at[move.dst_proc, sol.mem[outs]])
         dur_u = t_in + inst.proc_time[u, move.dst_proc] + t_out
         if not np.isfinite(dur_u):
             return np.inf
@@ -232,7 +395,50 @@ def _approx_eval(
 
 
 # --------------------------------------------------------------------------- #
-# main loop                                                                    #
+# perturbation (Alg. 2 line 11) — shared by both drivers                       #
+# --------------------------------------------------------------------------- #
+def _perturb(
+    inst: Instance,
+    cur: Solution,
+    sched: Schedule,
+    crit: np.ndarray,
+    rng: np.random.Generator,
+    params: "TSParams",
+) -> tuple[Solution, Schedule, int]:
+    """Random perturbation applied when every admissible move is tabu or
+    cyclic.  Returns the (possibly) perturbed solution, its schedule, and the
+    number of exact evaluations spent.
+
+    ``dst_pos`` is an index in the destination sequence *after removal*:
+    same-core moves draw from ``[0, len-1]`` (u itself vacates a slot) and
+    change-core moves from ``[0, len]`` (insertion at the end included).
+    """
+    n_evals = 0
+    n_tasks = inst.n_tasks
+    for _ in range(params.perturbation_size):
+        crit_ids = np.nonzero(crit)[0]
+        u = int(rng.choice(crit_ids)) if len(crit_ids) else int(rng.integers(n_tasks))
+        procs = inst.compatible_procs(u)
+        b = int(rng.choice(procs))
+        mch, pos = cur.positions(n_tasks)
+        same = b == int(mch[u])
+        hi = len(cur.proc_seq[b]) + (0 if same else 1)  # >= 1 in both cases
+        mv = Move("n7" if same else "cc", u, int(mch[u]), int(pos[u]), b,
+                  int(rng.integers(0, hi)))
+        cand = cur.copy()
+        try:
+            apply_move(cand, mv)
+        except AssertionError:
+            continue
+        s = exact_schedule(inst, cand)
+        n_evals += 1
+        if s is not None:
+            cur, sched = cand, s
+    return cur, sched, n_evals
+
+
+# --------------------------------------------------------------------------- #
+# scalar-loop reference driver                                                 #
 # --------------------------------------------------------------------------- #
 def tabu_search(
     inst: Instance,
@@ -251,7 +457,8 @@ def tabu_search(
     t0 = time.monotonic()
     engine = BatchEvaluator(inst, backend=params.backend)
 
-    cur = memory_update(inst, init, refresh_every=params.mem_refresh_every)
+    cur = memory_update(inst, init, refresh_every=params.mem_refresh_every,
+                        scalar=params.mem_update_scalar)
     sched = exact_schedule(inst, cur)
     assert sched is not None, "initial solution must be acyclic"
     best = cur.copy()
@@ -301,8 +508,6 @@ def tabu_search(
         if not moves:
             break
 
-        mach, _ = cur.positions(n_tasks)
-
         def resulting_config(m: Move) -> tuple[int, int, int]:
             dst = cur.proc_seq[m.dst_proc]
             if m.kind == "n7":
@@ -314,7 +519,7 @@ def tabu_search(
 
         scored = []
         for m in moves:
-            est = _approx_eval(inst, cur, m, r, q, dur, sched.makespan)
+            est = _approx_eval(inst, cur, m, r, q, dur)
             n_approx += 1
             if np.isfinite(est):
                 scored.append((est, m))
@@ -371,31 +576,8 @@ def tabu_search(
             break
         if chosen is None:
             # all admissible moves tabu/cyclic → random perturbation (line 11)
-            for _ in range(params.perturbation_size):
-                crit_ids = np.nonzero(crit)[0]
-                u = int(rng.choice(crit_ids)) if len(crit_ids) else int(rng.integers(n_tasks))
-                procs = inst.compatible_procs(u)
-                b = int(rng.choice(procs))
-                mch, pos = cur.positions(n_tasks)
-                mv = Move(
-                    "cc" if b != mch[u] else "n7",
-                    u,
-                    int(mch[u]),
-                    int(pos[u]),
-                    b,
-                    int(rng.integers(0, len(cur.proc_seq[b]) + (0 if b != mch[u] else 0) or 1))
-                    if len(cur.proc_seq[b])
-                    else 0,
-                )
-                cand = cur.copy()
-                try:
-                    apply_move(cand, mv)
-                except AssertionError:
-                    continue
-                s = exact_schedule(inst, cand)
-                n_exact += 1
-                if s is not None:
-                    cur, sched = cand, s
+            cur, sched, n_pert = _perturb(inst, cur, sched, crit, rng, params)
+            n_exact += n_pert
             unimproved += 1
             if _fire(on_iteration, False, sched.makespan):
                 stop_reason = "callback"
@@ -415,7 +597,8 @@ def tabu_search(
         cur = cand
         accepted += 1
         if accepted % params.mem_update_period == 0:
-            cur = memory_update(inst, cur, refresh_every=params.mem_refresh_every)
+            cur = memory_update(inst, cur, refresh_every=params.mem_refresh_every,
+                                scalar=params.mem_update_scalar)
             sched = exact_schedule(inst, cur)
             n_exact += 1
             assert sched is not None
@@ -448,3 +631,347 @@ def tabu_search(
         n_approx_evals=n_approx,
         stop_reason=stop_reason,
     )
+
+
+# --------------------------------------------------------------------------- #
+# array-native multi-walk driver                                               #
+# --------------------------------------------------------------------------- #
+class _WalkRound:
+    """Per-walk chunked top-K evaluation state within one iteration."""
+
+    __slots__ = ("mb", "is_tabu", "pos", "examined", "done",
+                 "chosen_i", "chosen_mk", "chosen_start", "chosen_finish",
+                 "chosen_cand")
+
+    def __init__(self, mb: MoveBatch, is_tabu: np.ndarray):
+        self.mb = mb
+        self.is_tabu = is_tabu
+        self.pos = 0
+        self.examined = 0
+        self.done = False
+        self.chosen_i: int | None = None
+        self.chosen_mk = np.inf
+        self.chosen_start = None
+        self.chosen_finish = None
+        self.chosen_cand = None  # Solution (scalar backend only)
+
+
+def tabu_multiwalk(
+    inst: Instance,
+    inits: list[Solution],
+    params: TSParams | None = None,
+    *,
+    init_labels: list[str] | None = None,
+    on_iteration=None,
+    on_improvement=None,
+) -> MultiWalkResult:
+    """Algorithm 2 as W lock-step walks on one packed array state.
+
+    Every walk runs the full tabu semantics independently (own tabu table,
+    aspiration, RNG stream, unimproved counter); the budget
+    (``time_limit`` / ``max_iters`` / ``max_evals``) is shared globally.
+    Walk 0 seeds its RNG with ``params.seed`` exactly like
+    :func:`tabu_search`, so ``W=1`` reproduces the single-walk trajectory
+    (identical history, incumbent, and eval counts).  Callbacks fire once
+    per lock-step iteration with the cross-walk incumbent.
+    """
+    params = params or TSParams()
+    w_count = len(inits)
+    assert w_count >= 1, "tabu_multiwalk needs at least one init"
+    labels = init_labels or [f"walk{w}" for w in range(w_count)]
+    t0 = time.monotonic()
+    engine = BatchEvaluator(inst, backend=params.backend)
+    scalar = engine.backend == "scalar"
+    n_procs, n_tasks = inst.n_procs, inst.n_tasks
+    rngs = [np.random.default_rng(params.seed if w == 0 else [params.seed, w])
+            for w in range(w_count)]
+    # compatible-core CSR (task → cores), precomputed once
+    finite_pt = np.isfinite(inst.proc_time)
+    compat_indptr = np.zeros(n_tasks + 1, dtype=np.int64)
+    np.cumsum(finite_pt.sum(axis=1), out=compat_indptr[1:])
+    compat_idx = np.nonzero(finite_pt)[1]
+
+    cur_sols: list[Solution] = [
+        memory_update(inst, init, refresh_every=params.mem_refresh_every,
+                      scalar=params.mem_update_scalar)
+        for init in inits
+    ]
+    # init (and post-Alg-3) schedules come from the scalar DP like the legacy
+    # driver: bit-identical to the numpy engine, and exact (float64) on jax
+    scheds0 = [exact_schedule(inst, s) for s in cur_sols]
+    assert all(s is not None for s in scheds0), "initial solutions must be acyclic"
+    packed = PackedSolutions.from_solutions(inst, cur_sols)
+    start = np.stack([s.start for s in scheds0])
+    finish = np.stack([s.finish for s in scheds0])
+    cur_mk = np.array([s.makespan for s in scheds0])
+    best_mk = cur_mk.copy()
+    best_sols = [s.copy() for s in cur_sols]
+    histories: list[list[tuple[int, float]]] = [[(0, float(best_mk[w]))]
+                                                for w in range(w_count)]
+    sol_cache: list[Solution | None] = list(cur_sols)
+
+    def _sol(w: int) -> Solution:
+        if sol_cache[w] is None:
+            sol_cache[w] = packed.to_solution(w)
+        return sol_cache[w]
+
+    global_best = float(best_mk.min())
+    g_hist: list[tuple[int, float]] = [(0, global_best)]
+    init_mk_min = global_best
+    tabu: list[dict[tuple[int, int, int], int]] = [{} for _ in range(w_count)]
+    unimproved = np.zeros(w_count, dtype=np.int64)
+    accepted = np.zeros(w_count, dtype=np.int64)
+    active = np.ones(w_count, dtype=bool)
+    it = 0
+    n_exact = n_approx = 0
+    stop_reason = "converged"
+
+    def _fire(cb, improved: bool, current: float) -> bool:
+        if cb is None:
+            return False
+        event = TSEvent(
+            iteration=it,
+            best_makespan=global_best,
+            current_makespan=current,
+            elapsed=time.monotonic() - t0,
+            n_exact_evals=n_exact,
+            n_approx_evals=n_approx,
+            improved=improved,
+        )
+        return bool(cb(event))
+
+    while active.any():
+        if time.monotonic() - t0 > params.time_limit:
+            stop_reason = "time_limit"
+            break
+        if params.max_iters is not None and it >= params.max_iters:
+            stop_reason = "max_iters"
+            break
+        if params.max_evals is not None and n_exact >= params.max_evals:
+            stop_reason = "max_evals"
+            break
+        it += 1
+        aw = [int(w) for w in np.nonzero(active)[0]]
+        # tails (Q) for the active walks in one batched backward sweep —
+        # bit-exact with the scalar heads_tails (PR-2 parity guarantee)
+        dur_all = finish - start
+        sub = PackedSolutions(assign=packed.assign[aw], mem=packed.mem[aw],
+                              mpred=packed.mpred[aw], msucc=packed.msucc[aw])
+        q_sub = engine.backward_tails(sub, dur_all[aw])
+
+        rounds: dict[int, _WalkRound] = {}
+        crits: dict[int, np.ndarray] = {}
+        mach_all, pos_all = packed.positions()
+        for wi, w in enumerate(aw):
+            r = start[w]
+            q = q_sub[wi]
+            dur = dur_all[w]
+            mkw = float(cur_mk[w])
+            slack = mkw - r - q
+            crit = slack <= _EPS * max(1.0, mkw)
+            crits[w] = crit
+            mach, pos = mach_all[w], pos_all[w]
+            mb = MoveBatch.concat([
+                _n7_move_batch(packed, w, crit),
+                _cc_move_batch(inst, compat_indptr, compat_idx, packed, w, crit,
+                               r, params.n_change_core_positions, mach, pos),
+            ])
+            if len(mb) == 0:
+                active[w] = False  # the scalar driver's `if not moves: break`
+                continue
+            est = approx_eval_moves(inst, packed, w, mb, r, q, dur)
+            n_approx += len(mb)
+            fi = np.nonzero(np.isfinite(est))[0]
+            order = fi[np.argsort(est[fi], kind="stable")]
+            mb_sorted = mb.take(order)
+            est_sorted = est[order]
+            tk, dp, pr = _resulting_configs(packed, w, mb_sorted)
+            tab = tabu[w]
+            is_tabu = np.fromiter(
+                (tab.get((int(tk[i]), int(dp[i]), int(pr[i])), -1) >= it
+                 for i in range(len(order))),
+                dtype=bool, count=len(order))
+            adm = ~(is_tabu & (est_sorted >= best_mk[w]))
+            rounds[w] = _WalkRound(mb_sorted.take(adm), is_tabu[adm])
+
+        if not rounds:
+            # every active walk ran out of moves (the scalar driver breaks
+            # without firing callbacks); the while-condition ends the search
+            continue
+
+        # chunked top-K exact evaluation: all unresolved walks share one
+        # (Σ chunk, n_tasks) engine batch per round
+        while True:
+            plan: list[tuple[int, int, int]] = []  # (walk, lo, size)
+            planned = n_exact
+            for w in sorted(rounds):
+                wr = rounds[w]
+                if wr.done:
+                    continue
+                if wr.chosen_i is not None and wr.examined >= params.top_k:
+                    wr.done = True
+                    continue
+                if wr.pos >= len(wr.mb):
+                    wr.done = True
+                    continue
+                size = min(params.top_k, len(wr.mb) - wr.pos)
+                if params.max_evals is not None:
+                    size = min(size, params.max_evals - planned)
+                    if size <= 0:
+                        wr.done = True
+                        continue
+                plan.append((w, wr.pos, size))
+                wr.pos += size
+                planned += size
+            if not plan:
+                break
+            if scalar:
+                cands = []
+                for w, lo, size in plan:
+                    base = _sol(w)
+                    for i in range(lo, lo + size):
+                        c = base.copy()
+                        apply_move(c, _move_at(rounds[w].mb, i))
+                        cands.append(c)
+                ev = engine.evaluate(cands)
+            else:
+                chunk_rows = np.concatenate(
+                    [np.full(size, w, dtype=np.int64) for w, _, size in plan])
+                chunk_mb = MoveBatch.concat(
+                    [rounds[w].mb.take(slice(lo, lo + size)) for w, lo, size in plan])
+                ev = engine.evaluate(packed.apply_moves(chunk_rows, chunk_mb))
+                cands = None
+            off = 0
+            for w, lo, size in plan:
+                wr = rounds[w]
+                wr.examined += size
+                for jj in range(size):
+                    g = off + jj
+                    if not ev.feasible[g]:
+                        continue
+                    mk_j = float(ev.makespan[g])
+                    if wr.is_tabu[lo + jj] and mk_j >= best_mk[w]:
+                        continue  # aspiration failed
+                    if mk_j < wr.chosen_mk:
+                        wr.chosen_i = lo + jj
+                        wr.chosen_mk = mk_j
+                        wr.chosen_start = ev.start[g].copy()
+                        wr.chosen_finish = ev.finish[g].copy()
+                        wr.chosen_cand = cands[g] if scalar else None
+                off += size
+            n_exact = planned
+
+        # resolve every walk's iteration: accept, or perturb, or stop
+        stop_all = False
+        for w in sorted(rounds):
+            wr = rounds[w]
+            if wr.chosen_i is None and params.max_evals is not None \
+                    and n_exact >= params.max_evals:
+                # this walk exhausted the shared eval budget without a move;
+                # still let the other walks commit their already-paid-for
+                # chosen candidates before stopping
+                stop_reason = "max_evals"
+                stop_all = True
+                continue
+            if wr.chosen_i is None:
+                # all admissible moves tabu/cyclic → random perturbation
+                sol_w = _sol(w)
+                sched_w = Schedule(start=start[w].copy(), finish=finish[w].copy(),
+                                   makespan=float(cur_mk[w]), topo=None)
+                sol_w, sched_w, n_pert = _perturb(inst, sol_w, sched_w, crits[w],
+                                                  rngs[w], params)
+                n_exact += n_pert
+                sol_cache[w] = sol_w
+                packed.set_solution(w, sol_w)
+                start[w] = sched_w.start
+                finish[w] = sched_w.finish
+                cur_mk[w] = sched_w.makespan
+                unimproved[w] += 1
+                continue
+
+            mv = _move_at(wr.mb, wr.chosen_i)
+            mp_before = int(packed.mpred[w, mv.task])
+            destroyed = (mv.task, mv.src_proc, mp_before if mp_before >= 0 else -2)
+            if mv.kind == "cc":
+                tenure = n_procs + int(rngs[w].integers(0, 2 * n_procs))       # θ1
+            else:
+                tenure = n_tasks + int(rngs[w].integers(0, max(1, n_tasks)))   # θ2
+            tabu[w][destroyed] = it + tenure
+
+            if scalar:
+                sol_cache[w] = wr.chosen_cand
+                packed.set_solution(w, wr.chosen_cand)
+            else:
+                packed.commit_move(w, mv)
+                sol_cache[w] = None
+            accepted[w] += 1
+            if accepted[w] % params.mem_update_period == 0:
+                sol_w = memory_update(inst, _sol(w),
+                                      refresh_every=params.mem_refresh_every,
+                                      scalar=params.mem_update_scalar)
+                sched_w = exact_schedule(inst, sol_w)
+                n_exact += 1
+                assert sched_w is not None
+                sol_cache[w] = sol_w
+                packed.set_solution(w, sol_w)
+                start[w] = sched_w.start
+                finish[w] = sched_w.finish
+                cur_mk[w] = sched_w.makespan
+            else:
+                start[w] = wr.chosen_start
+                finish[w] = wr.chosen_finish
+                cur_mk[w] = wr.chosen_mk
+
+            if cur_mk[w] < best_mk[w] - 1e-9:
+                best_sols[w] = _sol(w).copy()
+                best_mk[w] = cur_mk[w]
+                histories[w].append((it, float(best_mk[w])))
+                unimproved[w] = 0
+            else:
+                unimproved[w] += 1
+
+        new_gbest = float(best_mk.min())
+        g_improved = new_gbest < global_best
+        if g_improved:
+            global_best = new_gbest
+            g_hist.append((it, global_best))
+        if stop_all:
+            break
+        current = float(cur_mk[active].min()) if active.any() else global_best
+        if g_improved and _fire(on_improvement, True, current):
+            stop_reason = "callback"
+            break
+        if _fire(on_iteration, g_improved, current):
+            stop_reason = "callback"
+            break
+        active &= unimproved < params.max_unimproved
+
+    gi = int(np.argmin(best_mk))
+    # walks that deactivated on their own converged; walks still active when
+    # the loop ended were cut short by whatever stopped the search globally
+    per_walk = [
+        WalkInfo(init_label=labels[w], initial_makespan=histories[w][0][1],
+                 best_makespan=float(best_mk[w]), best=best_sols[w],
+                 history=histories[w],
+                 stop_reason=stop_reason if active[w] else "converged")
+        for w in range(w_count)
+    ]
+    return MultiWalkResult(
+        best=best_sols[gi],
+        best_makespan=float(best_mk[gi]),
+        initial_makespan=init_mk_min,
+        iterations=it,
+        elapsed=time.monotonic() - t0,
+        history=g_hist,
+        n_exact_evals=n_exact,
+        n_approx_evals=n_approx,
+        stop_reason=stop_reason,
+        walks=w_count,
+        per_walk=per_walk,
+    )
+
+
+def _move_at(mb: MoveBatch, i: int) -> Move:
+    """Scalar :class:`Move` view of row ``i`` of a :class:`MoveBatch`."""
+    return Move("cc" if mb.cc[i] else "n7", int(mb.task[i]), int(mb.src_proc[i]),
+                int(mb.src_pos[i]), int(mb.dst_proc[i]), int(mb.dst_pos[i]))

@@ -39,7 +39,7 @@ def test_registry_lists_all_paper_solvers():
     names = list_solvers()
     for s in STRATEGIES:
         assert f"greedy:{s}" in names
-    for m in ("load_balance", "tabu", "ilp_brute_force", "portfolio"):
+    for m in ("load_balance", "tabu", "tabu_multiwalk", "ilp_brute_force", "portfolio"):
         assert m in names
 
 
@@ -69,7 +69,7 @@ def test_unknown_method_names_the_registered_ones():
 # every method returns a well-formed SolveReport                               #
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize("method", [f"greedy:{s}" for s in STRATEGIES]
-                         + ["load_balance", "tabu", "portfolio"])
+                         + ["load_balance", "tabu", "tabu_multiwalk", "portfolio"])
 def test_every_method_returns_report(method):
     inst = small_instance(1)
     # constructive adapters tolerate search-only kwargs, so one uniform call

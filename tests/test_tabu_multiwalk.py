@@ -1,0 +1,400 @@
+"""Array-native tabu search: packed search state, vectorized neighborhoods,
+the batched approximate-evaluation kernel, the vectorized Algorithm 3, and
+the multi-walk driver's W=1 trajectory parity with the legacy scalar loop."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    InfeasibleInstanceError,
+    TSParams,
+    list_solvers,
+    random_instance,
+    solve,
+)
+from repro.core.eval_batch import MoveBatch, PackedSolutions, approx_eval_moves, batch_evaluate
+from repro.core.greedy import STRATEGIES, construct_greedy
+from repro.core.memory_update import memory_update
+from repro.core.solution import Solution, exact_schedule, heads_tails
+from repro.core.tabu import (
+    Move,
+    _approx_eval,
+    _cc_moves,
+    _n7_moves,
+    _perturb,
+    apply_move,
+    tabu_multiwalk,
+    tabu_search,
+)
+
+
+def small_instance(seed=0, **kw):
+    kw.setdefault("n_tasks", 40)
+    kw.setdefault("n_data", 100)
+    return random_instance(seed, **kw)
+
+
+def incumbent_with_neighborhood(seed, n_tasks=50, n_data=120):
+    inst = random_instance(seed, n_tasks=n_tasks, n_data=n_data)
+    sol = memory_update(inst, construct_greedy(inst, STRATEGIES[seed % 4], rng=seed))
+    sched = exact_schedule(inst, sol)
+    r, q, _, crit = heads_tails(inst, sol, sched)
+    moves = _n7_moves(sol, crit) + _cc_moves(inst, sol, crit, r, sched.start, 5)
+    return inst, sol, sched, (r, q, crit), moves
+
+
+def to_batch(moves) -> MoveBatch:
+    return MoveBatch(
+        cc=np.array([m.kind == "cc" for m in moves], dtype=bool),
+        task=np.array([m.task for m in moves], dtype=np.int64),
+        src_proc=np.array([m.src_proc for m in moves], dtype=np.int64),
+        src_pos=np.array([m.src_pos for m in moves], dtype=np.int64),
+        dst_proc=np.array([m.dst_proc for m in moves], dtype=np.int64),
+        dst_pos=np.array([m.dst_pos for m in moves], dtype=np.int64),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# packed search state                                                          #
+# --------------------------------------------------------------------------- #
+def test_packed_state_roundtrip_and_positions():
+    inst, sol, *_ = incumbent_with_neighborhood(0)
+    packed = PackedSolutions.from_solutions(inst, [sol])
+    back = packed.to_solution(0)
+    assert np.array_equal(back.assign, sol.assign)
+    assert np.array_equal(back.mem, sol.mem)
+    assert back.proc_seq == sol.proc_seq
+    mach, pos = packed.positions()
+    m_ref, p_ref = sol.positions(inst.n_tasks)
+    assert np.array_equal(mach[0], m_ref)
+    assert np.array_equal(pos[0], p_ref)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_apply_moves_matches_scalar_apply_move(seed):
+    """Gather/scatter candidate generation == list-surgery apply_move."""
+    inst, sol, _, _, moves = incumbent_with_neighborhood(seed)
+    assert moves
+    packed = PackedSolutions.from_solutions(inst, [sol])
+    mb = to_batch(moves)
+    cands = packed.apply_moves(np.zeros(len(moves), dtype=np.int64), mb)
+    for i, m in enumerate(moves):
+        ref = sol.copy()
+        apply_move(ref, m)
+        mp, ms = ref.machine_pred_succ(inst.n_tasks)
+        assert np.array_equal(cands.assign[i], ref.assign), (i, m)
+        assert np.array_equal(cands.mpred[i], mp), (i, m)
+        assert np.array_equal(cands.msucc[i], ms), (i, m)
+
+
+def test_commit_move_keeps_state_in_sync():
+    inst, sol, _, _, moves = incumbent_with_neighborhood(3)
+    packed = PackedSolutions.from_solutions(inst, [sol])
+    ref = sol.copy()
+    applied = 0
+    for m in moves:
+        mach, pos = ref.positions(inst.n_tasks)
+        if mach[m.task] != m.src_proc or pos[m.task] != m.src_pos:
+            continue  # stale after earlier commits; skip
+        limit = len(ref.proc_seq[m.dst_proc]) - (m.kind == "n7")
+        if m.dst_pos > limit:
+            continue  # insertion index stale too
+        apply_move(ref, m)
+        packed.commit_move(0, m)
+        applied += 1
+        if applied >= 5:
+            break
+    assert applied >= 2
+    back = packed.to_solution(0)
+    assert back.proc_seq == ref.proc_seq
+    mp, ms = ref.machine_pred_succ(inst.n_tasks)
+    assert np.array_equal(packed.mpred[0], mp)
+    assert np.array_equal(packed.msucc[0], ms)
+    assert np.array_equal(packed.assign[0], ref.assign)
+
+
+# --------------------------------------------------------------------------- #
+# batched approximate evaluation                                               #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_batched_approx_bit_exact_with_scalar(seed):
+    """The (M,) kernel must be array_equal with the per-move oracle."""
+    inst, sol, sched, (r, q, crit), moves = incumbent_with_neighborhood(seed)
+    assert len(moves) > 100  # a meaningful neighborhood
+    dur = sched.finish - sched.start
+    packed = PackedSolutions.from_solutions(inst, [sol])
+    est_batch = approx_eval_moves(inst, packed, 0, to_batch(moves), r, q, dur)
+    est_scalar = np.array(
+        [_approx_eval(inst, sol, m, r, q, dur) for m in moves])
+    assert np.array_equal(est_batch, est_scalar)
+
+
+def test_approx_ranking_quality_spearman():
+    """The approximate estimate must rank neighborhoods usefully (the mixed
+    strategy's premise): Spearman(approx, exact) >= 0.5 on sampled moves."""
+    rhos = []
+    for seed in range(3):
+        inst, sol, sched, (r, q, crit), moves = incumbent_with_neighborhood(seed)
+        dur = sched.finish - sched.start
+        packed = PackedSolutions.from_solutions(inst, [sol])
+        est = approx_eval_moves(inst, packed, 0, to_batch(moves), r, q, dur)
+        cands = []
+        kept_est = []
+        for m, e in zip(moves, est):
+            if not np.isfinite(e):
+                continue
+            c = sol.copy()
+            apply_move(c, m)
+            cands.append(c)
+            kept_est.append(e)
+        ev = batch_evaluate(inst, cands)
+        feas = ev.feasible
+        a = np.asarray(kept_est)[feas]
+        b = ev.makespan[feas]
+        assert len(a) > 50
+        ra = np.argsort(np.argsort(a))
+        rb = np.argsort(np.argsort(b))
+        rhos.append(float(np.corrcoef(ra, rb)[0, 1]))
+    assert min(rhos) >= 0.5, rhos
+
+
+# --------------------------------------------------------------------------- #
+# vectorized Algorithm 3                                                       #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("refresh_every", [1, 8])
+def test_memory_update_fast_matches_scalar_oracle(seed, refresh_every):
+    inst = small_instance(seed, fast_mem_fraction=0.12)
+    sol = construct_greedy(inst, "slack_first", rng=seed)
+    fast = memory_update(inst, sol, refresh_every=refresh_every)
+    ref = memory_update(inst, sol, refresh_every=refresh_every, scalar=True)
+    assert np.array_equal(fast.mem, ref.mem)
+
+
+def test_tabu_trajectory_identical_across_mem_update_paths():
+    """Alg-3 fast path is allocation-identical, so the whole search retraces."""
+    inst = small_instance(5)
+    base = TSParams(max_unimproved=12, time_limit=60.0, top_k=4, max_iters=40, seed=1)
+    a = tabu_search(inst, construct_greedy(inst, "slack_first", rng=1), base)
+    b = tabu_search(inst, construct_greedy(inst, "slack_first", rng=1),
+                    dataclasses.replace(base, mem_update_scalar=True))
+    assert a.history == b.history
+    assert a.n_exact_evals == b.n_exact_evals
+    assert a.best_makespan == b.best_makespan
+
+
+# --------------------------------------------------------------------------- #
+# multi-walk driver                                                            #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["numpy", "scalar"])
+@pytest.mark.parametrize("seed", [0, 4])
+def test_w1_reproduces_legacy_trajectory(backend, seed):
+    """The acceptance contract: W=1 == legacy tabu_search, bit for bit."""
+    inst = small_instance(seed)
+    params = TSParams(max_unimproved=15, time_limit=60.0, top_k=5,
+                      max_iters=60, seed=3, backend=backend)
+    legacy = tabu_search(inst, construct_greedy(inst, "slack_first", rng=3), params)
+    mw = tabu_multiwalk(inst, [construct_greedy(inst, "slack_first", rng=3)], params)
+    assert mw.history == legacy.history
+    assert mw.best_makespan == legacy.best_makespan
+    assert mw.iterations == legacy.iterations
+    assert mw.n_exact_evals == legacy.n_exact_evals
+    assert mw.n_approx_evals == legacy.n_approx_evals
+    assert mw.stop_reason == legacy.stop_reason
+    assert np.array_equal(mw.best.assign, legacy.best.assign)
+    assert np.array_equal(mw.best.mem, legacy.best.mem)
+    assert mw.best.proc_seq == legacy.best.proc_seq
+
+
+def test_w1_solver_matches_tabu_solver_through_solve():
+    inst = small_instance(6)
+    params = TSParams(max_unimproved=12, time_limit=60.0, top_k=4, max_iters=40)
+    a = solve(inst, "tabu", params=params, seed=2)
+    b = solve(inst, "tabu_multiwalk", walks=1, params=params, seed=2)
+    assert b.history == a.history
+    assert b.makespan == a.makespan
+    assert b.n_exact_evals == a.n_exact_evals
+
+
+def test_multiwalk_registered_and_report_well_formed():
+    assert "tabu_multiwalk" in list_solvers()
+    inst = small_instance(7)
+    rep = solve(inst, "tabu_multiwalk", walks=4,
+                params=TSParams(max_unimproved=10, time_limit=30.0, top_k=4,
+                                max_iters=30), seed=0)
+    assert rep.method == "tabu_multiwalk"
+    assert rep.feasible
+    assert rep.extras["walks"] == 4
+    per_walk = rep.extras["per_walk"]
+    assert len(per_walk) == 4
+    # the driver's incumbent is the best across walks, and each walk never
+    # worsens its own init
+    assert rep.makespan == min(w["best_makespan"] for w in per_walk)
+    for w in per_walk:
+        assert w["best_makespan"] <= w["initial_makespan"] + 1e-9
+        sched = exact_schedule(inst, w["solution"])
+        assert sched is not None
+        assert np.isclose(sched.makespan, w["best_makespan"], rtol=1e-9)
+    sched = exact_schedule(inst, rep.solution)
+    assert np.isclose(sched.makespan, rep.makespan, rtol=1e-9)
+
+
+def test_more_walks_never_worse_under_shared_nonbinding_budget():
+    """Walk 0 of a W-walk run retraces the single walk when the shared budget
+    does not bind, so best-of-W <= single-walk."""
+    inst = small_instance(8)
+    params = TSParams(max_unimproved=10, time_limit=60.0, top_k=4, max_iters=40)
+    single = solve(inst, "tabu_multiwalk", walks=1, params=params, seed=1)
+    multi = solve(inst, "tabu_multiwalk", walks=4, params=params, seed=1)
+    assert multi.makespan <= single.makespan + 1e-9
+    assert multi.extras["per_walk"][0]["best_makespan"] == single.makespan
+
+
+def test_multiwalk_respects_eval_budget():
+    from repro.core import Budget
+
+    inst = small_instance(9)
+    rep = solve(inst, "tabu_multiwalk", walks=3, budget=Budget(max_evals=40),
+                params=TSParams(max_unimproved=10**9, time_limit=60.0))
+    # chunk sizes are clamped to the cap; overshoot is bounded by the
+    # per-walk post-accept re-evaluation / perturbation evals of one round
+    slack = 3 * (TSParams().perturbation_size + 1)
+    assert rep.n_exact_evals <= 40 + slack
+    assert rep.stop_reason == "max_evals"
+
+
+def test_multiwalk_callbacks_fire_once_per_iteration():
+    from repro.core import Callbacks
+
+    inst = small_instance(10)
+    seen = []
+    cb = Callbacks(on_iteration=lambda ev: seen.append(ev) or len(seen) >= 5)
+    rep = solve(inst, "tabu_multiwalk", walks=3, callbacks=cb,
+                params=TSParams(max_unimproved=10**9, time_limit=60.0))
+    assert rep.stop_reason == "callback"
+    assert len(seen) == 5
+    assert [ev.iteration for ev in seen] == [1, 2, 3, 4, 5]
+
+
+# --------------------------------------------------------------------------- #
+# perturbation (Alg. 2 line 11) regression                                     #
+# --------------------------------------------------------------------------- #
+def _assert_valid_solution(inst, sol):
+    all_tasks = sorted(t for seq in sol.proc_seq for t in seq)
+    assert all_tasks == list(range(inst.n_tasks))
+    for p, seq in enumerate(sol.proc_seq):
+        for t in seq:
+            assert sol.assign[t] == p
+
+
+def test_perturbation_hammered_with_seeded_rngs():
+    """The perturbation path must keep solutions well-formed under heavy use
+    (regression for the dst_pos construction bug)."""
+    inst = small_instance(11)
+    params = TSParams()
+    sol = memory_update(inst, construct_greedy(inst, "slack_first", rng=0))
+    sched = exact_schedule(inst, sol)
+    _, _, _, crit = heads_tails(inst, sol, sched)
+    for seed in range(25):
+        rng = np.random.default_rng(seed)
+        cur, cur_sched = sol.copy(), sched
+        for _ in range(4):
+            cur, cur_sched, n_evals = _perturb(inst, cur, cur_sched, crit, rng, params)
+            assert 0 <= n_evals <= params.perturbation_size
+            _assert_valid_solution(inst, cur)
+            s = exact_schedule(inst, cur)
+            assert s is not None  # _perturb only keeps schedulable candidates
+            assert s.makespan == cur_sched.makespan
+
+
+class _EndInsertRng:
+    """Deterministic rng double: always pick task u, core b, and the highest
+    insertion index the perturbation allows."""
+
+    def __init__(self, u, b):
+        self.u, self.b = u, b
+        self.upper = None
+
+    def choice(self, arr):
+        arr = np.asarray(arr)
+        want = self.u if self.upper is None else self.b
+        self.upper = -1  # next choice() call selects the core
+        return want if want in arr else int(arr[0])
+
+    def integers(self, lo, hi):
+        self.hi_seen = hi
+        self.upper = None  # reset for the next perturbation step
+        return hi - 1
+
+
+def test_perturbation_change_core_can_insert_at_end():
+    """The fixed dst_pos range must reach the end of the target sequence for
+    change-core moves (the old `or`-bound expression could not)."""
+    inst = small_instance(12)
+    sol = memory_update(inst, construct_greedy(inst, "slack_first", rng=0))
+    sched = exact_schedule(inst, sol)
+    crit = np.ones(inst.n_tasks, dtype=bool)
+    mach, _ = sol.positions(inst.n_tasks)
+    # pick a task with at least one other compatible core
+    u = b = None
+    for t in range(inst.n_tasks):
+        procs = [int(p) for p in inst.compatible_procs(t) if p != mach[t]]
+        if procs and len(sol.proc_seq[procs[0]]) >= 2:
+            u, b = t, procs[0]
+            break
+    assert u is not None
+    target_len = len(sol.proc_seq[b])
+    rng = _EndInsertRng(u, b)
+    params = TSParams(perturbation_size=1)
+    cur, _, _ = _perturb(inst, sol, sched, crit, rng, params)
+    assert rng.hi_seen == target_len + 1  # [0, len] inclusive for change-core
+    if cur is not sol:  # candidate kept (acyclic): u is now last on core b
+        assert cur.proc_seq[b][-1] == u
+
+
+# --------------------------------------------------------------------------- #
+# greedy infeasibility diagnostics                                             #
+# --------------------------------------------------------------------------- #
+def _tiny_instance(data_size):
+    from repro.core.mdfg import Instance
+
+    # one task consuming initial-input d0 and producing d1; a single FINITE
+    # tier (deliberately unvalidatable: validate_instance demands an
+    # unbounded fallback, which is exactly what these diagnostics replace)
+    return Instance(
+        n_tasks=1,
+        n_data=2,
+        task_edges=np.zeros((0, 2), np.int64),
+        producer=np.array([-1, 0]),
+        cons_indptr=np.array([0, 1, 1]),
+        cons_idx=np.array([0]),
+        in_indptr=np.array([0, 1]),
+        in_idx=np.array([0]),
+        out_indptr=np.array([0, 1]),
+        out_idx=np.array([1]),
+        proc_time=np.array([[2.0]]),
+        data_size=np.asarray(data_size, dtype=np.float64),
+        mem_cap=np.array([5.0]),
+        access_time=np.array([[0.1]]),
+        mem_level=np.array([0]),
+        data_mem_ok=np.ones((2, 1), bool),
+    )
+
+
+def test_greedy_raises_on_unplaceable_initial_input():
+    inst = _tiny_instance([10.0, 1.0])  # d0 (initial) cannot fit anywhere
+    with pytest.raises(InfeasibleInstanceError, match="initial-input block 0") as ei:
+        construct_greedy(inst, "slack_first")
+    assert ei.value.block == 0
+    assert ei.value.task == -1
+    assert ei.value.tiers_tried == (0,)
+
+
+def test_greedy_raises_on_unplaceable_output_block():
+    inst = _tiny_instance([1.0, 10.0])  # d1 (output of task 0) cannot fit
+    with pytest.raises(InfeasibleInstanceError, match="block 1") as ei:
+        construct_greedy(inst, "slack_first")
+    assert ei.value.block == 1
+    assert ei.value.task == 0
+    assert ei.value.tiers_tried == (0,)
