@@ -9,6 +9,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import subprocess
 import time
 
 import numpy as np
@@ -16,6 +17,35 @@ import numpy as np
 from repro.core import TSParams, random_instance
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+HISTORY_PATH = os.path.join(RESULTS_DIR, "history.jsonl")
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(__file__), capture_output=True, text=True,
+            timeout=10, check=True,
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def append_history(bench: str, gates: dict, **extra) -> str:
+    """Append one machine-readable record to ``results/bench/history.jsonl``
+    so the perf trajectory is queryable across PRs: git sha, UTC timestamp,
+    bench name, and the gate values that run produced."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    record = {
+        "sha": git_sha(),
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "bench": bench,
+        "gates": gates,
+        **extra,
+    }
+    with open(HISTORY_PATH, "a") as f:
+        f.write(json.dumps(record) + "\n")
+    return HISTORY_PATH
 
 
 @dataclasses.dataclass(frozen=True)

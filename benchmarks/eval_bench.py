@@ -26,7 +26,7 @@ from repro.core.eval_batch import BatchEvaluator, _jax_available
 from repro.core.solution import exact_schedule, heads_tails
 from repro.core.tabu import _cc_moves, _n7_moves, apply_move
 
-from .common import emit, save_json
+from .common import append_history, emit, save_json
 
 
 def build_workload(seed: int, n_tasks: int, n_data: int, k_max: int):
@@ -53,16 +53,20 @@ def build_workload(seed: int, n_tasks: int, n_data: int, k_max: int):
     return inst, cands
 
 
-def time_backend(fn, rounds: int) -> float:
-    """Best-of-N wall time: the min is robust to CPU contention on shared
-    runners (the mean is not, and the 5x gate must not flake)."""
+def time_backend(fn, rounds: int) -> tuple[float, float]:
+    """(steady best-of-N, first-call) wall times.  The min is robust to CPU
+    contention on shared runners (the mean is not, and the 5x gate must not
+    flake); the first call is reported separately so jit compilation never
+    contaminates steady-state numbers."""
+    t0 = time.monotonic()
     fn()  # warmup (and jit compile for the jax backend)
+    first = time.monotonic() - t0
     best = np.inf
     for _ in range(rounds):
         t0 = time.monotonic()
         fn()
         best = min(best, time.monotonic() - t0)
-    return best
+    return best, first
 
 
 def main(argv=None) -> dict:
@@ -91,12 +95,12 @@ def main(argv=None) -> dict:
             for c in cands:
                 exact_schedule(inst, c)
 
-        t_scalar = time_backend(scalar_eval, args.rounds)
+        t_scalar, _ = time_backend(scalar_eval, args.rounds)
         run = {"k": k, "scalar_cands_per_s": k / t_scalar,
                "scalar_us_per_cand": 1e6 * t_scalar / k}
 
         np_engine = BatchEvaluator(inst, backend="numpy")
-        t_np = time_backend(lambda: np_engine.evaluate(cands), args.rounds)
+        t_np, _ = time_backend(lambda: np_engine.evaluate(cands), args.rounds)
         run["numpy_cands_per_s"] = k / t_np
         run["numpy_us_per_cand"] = 1e6 * t_np / k
         run["numpy_speedup"] = t_scalar / t_np
@@ -118,17 +122,31 @@ def main(argv=None) -> dict:
              f"{run['numpy_cands_per_s']:.0f} cands/s ({run['numpy_speedup']:.1f}x)")
 
     # the jax backend is measured last: its compile/runtime threads must not
-    # perturb the gated scalar/numpy timings above
+    # perturb the gated scalar/numpy timings above.  Compile time (the first
+    # call) is split from the steady-state number, and the bounded
+    # compile-cache counters are recorded alongside.
     if _jax_available():
         for run in payload["runs"]:
             inst, cands = workloads[run["k"]]
             jx_engine = BatchEvaluator(inst, backend="jax")
-            t_jx = time_backend(lambda: jx_engine.evaluate(cands), args.rounds)
+            t_jx, t_compile = time_backend(
+                lambda: jx_engine.evaluate(cands), args.rounds)
             run["jax_cands_per_s"] = run["k"] / t_jx
             run["jax_speedup"] = run["scalar_us_per_cand"] * run["k"] / (1e6 * t_jx)
+            run["jax_compile_seconds"] = t_compile - t_jx
+            run["jax_cache_info"] = jx_engine.cache_info()
+            emit(f"eval_jax_batch_k{run['k']}", 1e6 * t_jx / run["k"],
+                 f"{run['jax_cands_per_s']:.0f} cands/s steady "
+                 f"(compile {run['jax_compile_seconds']:.2f}s)")
 
     payload["best_numpy_speedup"] = max(r["numpy_speedup"] for r in payload["runs"])
     path = save_json("BENCH_eval", payload)
+    append_history("eval_bench", {
+        "best_numpy_speedup": payload["best_numpy_speedup"],
+        # None = gate not evaluated (smoke scale); True/False = gate verdict
+        "gate_numpy_5x": None if args.smoke
+        else payload["best_numpy_speedup"] >= 5.0,
+    }, scale=payload["scale"])
     print(f"wrote {path}  (best numpy batch speedup: "
           f"{payload['best_numpy_speedup']:.1f}x)")
     if not args.smoke and payload["best_numpy_speedup"] < 5.0:

@@ -43,24 +43,58 @@ def table3_init_strategies(sc: Scale) -> dict:
     return out
 
 
-def table4_ts_vs_lb(sc: Scale) -> dict:
+def _device_row_makespans(instances, sc: Scale, walks: int) -> list[float]:
+    """One vmapped device-engine launch per sync for a whole table row.
+
+    Inits replay the ``tabu_multiwalk`` solver's construction exactly
+    (walk 0 = slack_first at the params seed, walks 1..W-1 cycle the §V-B
+    strategies at seed+w), so backend="device" rows differ from the numpy
+    rows only by the engine, never by the starting solutions."""
+    from repro.core import solve_instances
+    from repro.core.greedy import STRATEGIES, construct_greedy
+
+    seed = sc.ts.seed
+    inits = [
+        [construct_greedy(inst, "slack_first", rng=seed)]
+        + [construct_greedy(inst, STRATEGIES[w % len(STRATEGIES)],
+                            rng=seed + w) for w in range(1, walks)]
+        for inst in instances
+    ]
+    results = solve_instances(instances, inits, sc.ts)
+    return [r.best_makespan for r in results]
+
+
+def table4_ts_vs_lb(sc: Scale, backend: str = "numpy") -> dict:
     """TS vs LB, reported as the paper's headline *improvement percentage*
     per row (5–25% claim) — the TS leg is the multi-walk engine (4 lock-step
-    walks over the §V-B init strategies)."""
+    walks over the §V-B init strategies).
+
+    ``backend="device"`` evaluates each table row's instances through the
+    vmapped device engine (``solve_instances``): the whole
+    (memory, cores) row advances in one compiled call per sync instead of
+    one Python-driven search per instance."""
     rows = []
-    for i in range(sc.n_instances):
-        for mem_frac, mem_name in ((0.04, "HighSpeedMemory-20%"), (0.2, "HighSpeedMemory-100%")):
-            for n_slow in (2, 4, 6, 8):
-                inst = sc.instance(
-                    200 + i, n_fast_cores=2, n_slow_cores=n_slow, fast_mem_fraction=mem_frac,
-                )
-                lb_mk = solve(inst, "load_balance").makespan
-                res = solve(inst, "tabu_multiwalk", walks=4, params=sc.ts,
-                            init="slack_first")
-                imp = 1 - res.makespan / lb_mk
+    for mem_frac, mem_name in ((0.04, "HighSpeedMemory-20%"), (0.2, "HighSpeedMemory-100%")):
+        for n_slow in (2, 4, 6, 8):
+            instances = [
+                sc.instance(200 + i, n_fast_cores=2, n_slow_cores=n_slow,
+                            fast_mem_fraction=mem_frac)
+                for i in range(sc.n_instances)
+            ]
+            lb_mks = [solve(inst, "load_balance").makespan for inst in instances]
+            if backend == "device":
+                ts_mks = _device_row_makespans(instances, sc, walks=4)
+            else:
+                ts_mks = [
+                    solve(inst, "tabu_multiwalk", walks=4, params=sc.ts,
+                          init="slack_first", backend=backend).makespan
+                    for inst in instances
+                ]
+            for i, (lb_mk, ts_mk) in enumerate(zip(lb_mks, ts_mks)):
+                imp = 1 - ts_mk / lb_mk
                 rows.append({
                     "instance": f"randomCaseB{i+1}", "memory": mem_name,
-                    "cores": f"H:2/L:{n_slow}", "LB": lb_mk, "TS": res.makespan,
+                    "cores": f"H:2/L:{n_slow}", "LB": lb_mk, "TS": ts_mk,
                     "ratio": imp,
                     "improvement_pct": round(100 * imp, 1),
                 })
@@ -139,14 +173,16 @@ def fig56_mixed_eval(sc: Scale, ks=(1, 3, 5, 10, 20, 40, 80)) -> dict:
     return out
 
 
-def fig7_memory_ratio(sc: Scale, fracs=(0.0, 0.02, 0.05, 0.08, 0.12, 0.16, 0.2)) -> dict:
+def fig7_memory_ratio(sc: Scale, fracs=(0.0, 0.02, 0.05, 0.08, 0.12, 0.16, 0.2),
+                      backend: str = "numpy") -> dict:
     rows = []
     inst_seed = 600
     for frac in fracs:
         inst = sc.instance(inst_seed, fast_mem_fraction=max(frac, 1e-9))
         lb_mk = solve(inst, "load_balance").makespan
         res = solve(inst, "tabu_multiwalk", walks=4, params=sc.ts,
-                    init="slack_first")
+                    init="slack_first",
+                    backend=None if backend == "numpy" else backend)
         rows.append({"frac": frac, "LB": lb_mk, "TS": res.makespan,
                      "improvement_pct": round(100 * (1 - res.makespan / lb_mk), 1)})
     ts0 = rows[0]["TS"]

@@ -19,16 +19,20 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale instances/budgets")
     ap.add_argument("--only", default=None,
                     help="substring filter: table3|table4|table5|fig3|fig56|fig7|portfolio|kernel|planner")
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "jax", "scalar", "device"),
+                    help="tabu engine for table4/fig7; 'device' runs table4 "
+                         "rows through the vmapped device engine")
     args = ap.parse_args()
     sc = scale(args.full)
 
     benches = [
         ("table3", lambda: paper_tables.table3_init_strategies(sc)),
-        ("table4", lambda: paper_tables.table4_ts_vs_lb(sc)),
+        ("table4", lambda: paper_tables.table4_ts_vs_lb(sc, backend=args.backend)),
         ("table5", lambda: paper_tables.table5_core_sweep(sc)),
         ("fig3", lambda: paper_tables.fig3_stability(sc, n_runs=20 if args.full else 8)),
         ("fig56", lambda: paper_tables.fig56_mixed_eval(sc)),
-        ("fig7", lambda: paper_tables.fig7_memory_ratio(sc)),
+        ("fig7", lambda: paper_tables.fig7_memory_ratio(sc, backend=args.backend)),
         ("portfolio", lambda: paper_tables.portfolio_vs_single(sc)),
         ("kernel", kernel_bench.main),
         ("planner", planner_tpu.main),

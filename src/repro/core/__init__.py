@@ -3,16 +3,16 @@
 Data allocation + task scheduling on heterogeneous multiprocessor systems
 under memory constraints (Ding et al., 2022): MDFG instances, exact/approx
 schedule evaluation, greedy construction (Alg. 1), tabu search (Alg. 2),
-memory update (Alg. 3), the load-balancing baseline, and the ILP model.
+memory update (Alg. 3), the load-balancing baseline, the ILP model, and the
+device-resident search engine.
 
-The supported solver surface is :func:`repro.solve` (see ``core/api.py``);
-the historical free functions (``tabu_search``, ``construct_greedy``,
-``load_balance``, ``brute_force_optimum``) remain importable from here but
-emit ``DeprecationWarning``.
+The supported solver surface is :func:`repro.solve` (see ``core/api.py``).
+The PR-1 deprecation shims for the historical free functions
+(``tabu_search``, ``construct_greedy``, ``load_balance``,
+``brute_force_optimum``) are gone; import the implementations from their
+submodules (``repro.core.tabu`` etc.) when a test or benchmark needs the
+raw drivers.
 """
-import functools
-import warnings
-
 from .mdfg import InfeasibleInstanceError, Instance, random_instance, validate_instance
 from .solution import (
     Schedule,
@@ -34,8 +34,6 @@ from .eval_batch import (
     pack_solutions,
 )
 from .greedy import STRATEGIES
-from .greedy import construct_greedy as _construct_greedy
-from .load_balance import load_balance as _load_balance
 from .memory_update import memory_update
 from .tabu import (
     Move,
@@ -47,9 +45,8 @@ from .tabu import (
     critical_blocks,
     tabu_multiwalk,
 )
-from .tabu import tabu_search as _tabu_search
+from .device_search import DeviceConfig, device_multiwalk, solve_instances
 from .ilp import build_ilp
-from .ilp import brute_force_optimum as _brute_force_optimum
 from .api import (
     Budget,
     Callbacks,
@@ -82,8 +79,6 @@ __all__ = [
     "batch_evaluate",
     "pack_solutions",
     "STRATEGIES",
-    "construct_greedy",
-    "load_balance",
     "memory_update",
     "Move",
     "MultiWalkResult",
@@ -92,9 +87,10 @@ __all__ = [
     "TSResult",
     "apply_move",
     "critical_blocks",
-    "tabu_search",
     "tabu_multiwalk",
-    "brute_force_optimum",
+    "DeviceConfig",
+    "device_multiwalk",
+    "solve_instances",
     "build_ilp",
     "Budget",
     "Callbacks",
@@ -105,29 +101,3 @@ __all__ = [
     "get_solver",
     "list_solvers",
 ]
-
-
-def _deprecated_entry_point(fn, name: str, method_hint: str):
-    """Legacy solver entry points keep working but point at repro.solve."""
-
-    @functools.wraps(fn)
-    def wrapper(*args, **kwargs):
-        warnings.warn(
-            f"repro.core.{name} is deprecated; use "
-            f"repro.solve(instance, method={method_hint!r}, ...) instead",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return fn(*args, **kwargs)
-
-    return wrapper
-
-
-construct_greedy = _deprecated_entry_point(
-    _construct_greedy, "construct_greedy", "greedy:slack_first"
-)
-load_balance = _deprecated_entry_point(_load_balance, "load_balance", "load_balance")
-tabu_search = _deprecated_entry_point(_tabu_search, "tabu_search", "tabu")
-brute_force_optimum = _deprecated_entry_point(
-    _brute_force_optimum, "brute_force_optimum", "ilp_brute_force"
-)

@@ -358,6 +358,8 @@ def _solve_tabu_multiwalk(
     inits: list[Solution] | None = None,
     params: TSParams | None = None,
     backend: str | None = None,
+    device: dict | None = None,
+    _method: str = "tabu_multiwalk",
 ) -> SolveReport:
     """W independent tabu walks in lock-step on the packed array state
     (``tabu.tabu_multiwalk``), sharing one exact-evaluation batch per round
@@ -368,6 +370,13 @@ def _solve_tabu_multiwalk(
     the §V-B construction strategies with per-walk seeds.  ``inits`` passes
     explicit start solutions instead (``walks`` is then ignored) — the
     portfolio uses this to continue from its best distinct incumbents.
+
+    ``backend="device"`` (or ``params.backend="device"``) routes the whole
+    search through the device-resident engine
+    (``device_search.device_multiwalk``): one jitted while_loop per
+    ``sync_every`` rounds instead of one engine batch per round.  ``device``
+    passes :class:`~repro.core.device_search.DeviceConfig` fields
+    (``sync_every``, ``crit_cap``, ``perturb``, ``donate``).
     """
     t0 = time.monotonic()
     params = params or TSParams()
@@ -389,18 +398,45 @@ def _solve_tabu_multiwalk(
             strategy = STRATEGIES[w % len(STRATEGIES)]
             init_sols.append(construct_greedy(inst, strategy, rng=seed + w))
             labels.append(f"{strategy}@{seed + w}")
-    res = tabu_multiwalk(
-        inst,
-        init_sols,
-        _budgeted_ts_params(params, budget, seed),
-        init_labels=labels,
-        on_iteration=callbacks.on_iteration,
-        on_improvement=callbacks.on_improvement,
-    )
+    ts = _budgeted_ts_params(params, budget, seed)
+    if ts.backend == "device":
+        from .device_search import DeviceConfig, device_multiwalk
+
+        cfg = DeviceConfig(**(device or {}))
+        res = device_multiwalk(
+            inst, init_sols, ts, config=cfg, init_labels=labels,
+            on_iteration=callbacks.on_iteration,
+            on_improvement=callbacks.on_improvement,
+        )
+    else:
+        if device is not None:
+            raise ValueError("device config requires backend='device'")
+        res = tabu_multiwalk(
+            inst,
+            init_sols,
+            ts,
+            init_labels=labels,
+            on_iteration=callbacks.on_iteration,
+            on_improvement=callbacks.on_improvement,
+        )
     sched = exact_schedule(inst, res.best)
     assert sched is not None
+    extras = {
+        "walks": res.walks,
+        "backend": ts.backend,
+        "per_walk": [
+            {"init": wi.init_label,
+             "initial_makespan": wi.initial_makespan,
+             "best_makespan": wi.best_makespan,
+             "solution": wi.best,
+             "history": wi.history}
+            for wi in res.per_walk
+        ],
+    }
+    if hasattr(res, "compile_seconds"):
+        extras["compile_seconds"] = res.compile_seconds
     return SolveReport(
-        method="tabu_multiwalk",
+        method=_method,
         solution=res.best,
         makespan=res.best_makespan,
         feasible=memory_feasible(inst, res.best, sched),
@@ -411,18 +447,34 @@ def _solve_tabu_multiwalk(
         wall_time=time.monotonic() - t0,
         history=res.history,
         stop_reason=res.stop_reason,
-        extras={
-            "walks": res.walks,
-            "per_walk": [
-                {"init": wi.init_label,
-                 "initial_makespan": wi.initial_makespan,
-                 "best_makespan": wi.best_makespan,
-                 "solution": wi.best,
-                 "history": wi.history}
-                for wi in res.per_walk
-            ],
-        },
+        extras=extras,
     )
+
+
+@register_solver("tabu_device")
+def _solve_tabu_device(
+    inst: Instance,
+    *,
+    budget: Budget,
+    seed: int | None,
+    callbacks: Callbacks,
+    walks: int = 8,
+    init: Union[Solution, str, None] = None,
+    inits: list[Solution] | None = None,
+    params: TSParams | None = None,
+    device: dict | None = None,
+    backend: str | None = None,
+) -> SolveReport:
+    """The device-resident multiwalk engine as a first-class solver:
+    ``solve(inst, "tabu_device", walks=8, device={"sync_every": 64})``."""
+    if backend not in (None, "device"):
+        raise ValueError(
+            f"tabu_device always runs backend='device'; got backend={backend!r}"
+            " — use solve(inst, 'tabu_multiwalk', backend=...) to pick one")
+    return _solve_tabu_multiwalk(
+        inst, budget=budget, seed=seed, callbacks=callbacks, walks=walks,
+        init=init, inits=inits, params=params, backend="device",
+        device=device, _method="tabu_device")
 
 
 @register_solver("ilp_brute_force")

@@ -1,0 +1,1449 @@
+"""Device-resident multi-walk tabu search — the whole round loop as one
+``jax.jit``-compiled program.
+
+PR 3 made every tabu *iteration* array-shaped, but the driver still
+ping-pongs between Python and the evaluator each round.  This engine ports
+the full multiwalk round — N7/change-core move generation, the batched
+approximate window kernel, tabu-table/aspiration updates, chunked top-K
+exact evaluation (via ``repro.kernels.schedule_dp``), commit, and incumbent
+tracking — into a single jitted ``lax.while_loop`` body over the packed
+``(W, …)`` state.  A whole budget of rounds runs with zero host round-trips
+except periodic incumbent readback every ``sync_every`` rounds (where wall
+time is checked and, when enabled, Algorithm 3 re-allocates memory).
+
+Static-shape discipline:
+
+* ``n_tasks``/``n_procs``/``seq_len``/edge counts are padded to **shape
+  buckets** (``schedule_dp.bucket``), so recompiles are bounded and a batch
+  of same-bucket instances shares one compiled program;
+* the per-round neighborhood is laid out at a fixed capacity derived from a
+  **critical-set bucket** ``crit_cap``: rounds whose critical set overflows
+  it set an overflow flag, the launch returns early without committing the
+  round, and the host relaunches with the next bucket (escalation is
+  geometric, so at most O(log n) recompiles per run);
+* compiled launches live in a bounded LRU keyed on the bucket tuple
+  (``launch_cache_info()``), and the state pytree is **donated** to each
+  launch, so a run owns one set of device buffers.
+
+Parity contract (asserted by ``tests/test_device_search.py`` and the
+``search_bench`` device lane): with ``W=1``, float64 (the engine always
+traces under ``jax.experimental.enable_x64``), and ``mem_update_period``
+large enough that Algorithm 3 never fires inside the horizon, the engine's
+trajectory — history, incumbent, iteration and eval counts — is
+**bit-for-bit identical** to the legacy ``tabu_search`` / ``tabu_multiwalk``
+drivers on the numpy backend, as long as the trajectory never enters the
+perturbation branch.  This holds because every float op replays the numpy
+engine's operand set and order: max reductions are order-independent,
+durations replay the global cumsum-difference via a blocked *sequential*
+scan (``jnp.cumsum`` does NOT match ``np.cumsum`` bitwise — measured, not
+assumed), approximate-window sums replay the scalar left-to-right order,
+tie-breaks use stable sorts over the scalar enumeration order, and tabu
+tenures are counter-based draws (``tabu._tenure_draw``) replayed in uint32.
+Divergence points are explicit: the perturbation branch draws from an
+on-device threefry stream (one random move per stalled round instead of the
+legacy ``perturbation_size`` chain), and Algorithm 3 is amortized to sync
+boundaries instead of per accepted move.
+
+``solve_instances`` vmaps the engine over a batch of same-bucket instances
+so ``benchmarks/search_bench.py`` / ``paper_tables.py`` can evaluate an
+entire Table-II row in one compiled call; per-instance trajectories are
+identical to per-instance runs because every loop update is masked.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .eval_batch import APPROX_WINDOW, LRUCache
+from .mdfg import Instance
+from .memory_update import memory_update
+from .solution import _EPS, Solution, exact_schedule
+from .tabu import MultiWalkResult, TSEvent, TSParams, WalkInfo
+
+__all__ = [
+    "DeviceConfig",
+    "MEM_UPDATE_DISABLED",
+    "device_multiwalk",
+    "solve_instances",
+    "launch_cache_info",
+]
+
+# mem_update_period at or above this disables Algorithm 3 inside the search
+# (the parity profile); below it, the device engine amortizes Alg-3 to sync
+# boundaries instead of running it per accepted move.
+MEM_UPDATE_DISABLED = 1 << 30
+
+_I32 = np.int32
+_NONE = np.int64(1 << 62)  # "unbounded" sentinel for budget axes
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConfig:
+    """Launch shape/behavior knobs (everything here is compile-relevant)."""
+
+    sync_every: int = 64          # rounds per jit launch (readback cadence)
+    crit_cap: int | None = None   # critical-set capacity; None = auto bucket
+    donate: bool = True           # donate the state pytree to each launch
+    perturb: bool = True          # threefry random move on stalled rounds
+
+
+_LAUNCHES = LRUCache(maxsize=8)
+
+
+def launch_cache_info() -> dict:
+    """Compiled-launch cache counters (`{hits, misses, currsize, maxsize}`)."""
+    return _LAUNCHES.info()
+
+
+# --------------------------------------------------------------------------- #
+# instance packing                                                             #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class InstancePack:
+    """Bucket-padded array form of one instance (host numpy)."""
+
+    n: int            # real task count
+    p: int            # real proc count
+    d: int            # real data count
+    n_b: int
+    p_b: int
+    s_b: int          # seq capacity = n_b + 1
+    d_b: int
+    pred_mat: np.ndarray    # (n_b, Dp) int32, -1 pad
+    succ_mat: np.ndarray    # (n_b, Ds) int32
+    in_blk: np.ndarray      # (n_b, Din) int32, -1 pad (CSR order per task)
+    out_blk: np.ndarray     # (n_b, Dout) int32
+    in_idx: np.ndarray      # (E_in,) int32 padded, with valid mask
+    in_owner: np.ndarray    # (E_in,) int32
+    in_valid: np.ndarray    # (E_in,) bool
+    in_ptr: np.ndarray      # (n_b + 1,) int32 (pad tasks repeat the end)
+    out_idx: np.ndarray
+    out_owner: np.ndarray
+    out_valid: np.ndarray
+    out_ptr: np.ndarray
+    proc_time: np.ndarray   # (n_b, p_b) f64; pad tasks 0.0, pad procs +inf
+    access_time: np.ndarray  # (p_b, n_mems) f64 (pad procs repeat row 0)
+    data_size: np.ndarray   # (d_b,) f64 (pads 0)
+    compat: np.ndarray      # (n_b, p_b) bool
+
+
+def _pad_csr(n: int, n_b: int, indptr, idx, e_b: int, quantum: int = 128):
+    e = len(idx)
+    e_b = max(e_b, quantum * ((e + quantum - 1) // quantum), quantum)
+    out_idx = np.zeros(e_b, dtype=_I32)
+    out_idx[:e] = idx
+    owner = np.zeros(e_b, dtype=_I32)
+    owner[:e] = np.repeat(np.arange(n), np.diff(indptr))
+    valid = np.zeros(e_b, dtype=bool)
+    valid[:e] = True
+    ptr = np.full(n_b + 1, indptr[-1], dtype=_I32)
+    ptr[: n + 1] = indptr
+    return out_idx, owner, valid, ptr, e_b
+
+
+def _dense_blocks(n: int, n_b: int, indptr, idx, width: int) -> np.ndarray:
+    from ..kernels.schedule_dp import dense_from_csr
+
+    return dense_from_csr(n, n_b, indptr, idx, min_width=width)
+
+
+def pack_instance(inst: Instance, *, n_b: int | None = None,
+                  p_b: int | None = None, d_b: int | None = None,
+                  widths: tuple[int, int, int, int] = (1, 1, 1, 1),
+                  e_b: tuple[int, int] = (0, 0)) -> InstancePack:
+    from ..kernels import schedule_dp as sdp
+
+    n, p, d = inst.n_tasks, inst.n_procs, inst.n_data
+    n_b = n_b or sdp.bucket(n)
+    p_b = p_b or p
+    d_b = d_b or sdp.bucket(d)
+    graph = sdp.dense_graph(inst, n_bucket=n_b)
+    in_idx, in_owner, in_valid, in_ptr, _ = _pad_csr(
+        n, n_b, inst.in_indptr, inst.in_idx, e_b[0])
+    out_idx, out_owner, out_valid, out_ptr, _ = _pad_csr(
+        n, n_b, inst.out_indptr, inst.out_idx, e_b[1])
+    pt = np.full((n_b, p_b), np.inf)
+    pt[:n, :p] = inst.proc_time
+    pt[n:, :] = 0.0  # pad tasks: zero duration everywhere
+    at = np.zeros((p_b, inst.n_mems))
+    at[:p] = inst.access_time
+    at[p:] = inst.access_time[0]
+    ds = np.zeros(d_b)
+    ds[:d] = inst.data_size
+    compat = np.zeros((n_b, p_b), dtype=bool)
+    compat[:n, :p] = np.isfinite(inst.proc_time)
+    return InstancePack(
+        n=n, p=p, d=d, n_b=n_b, p_b=p_b, s_b=n_b + 1, d_b=d_b,
+        pred_mat=_dense_blocks(n, n_b, inst.pred_indptr, inst.pred_idx, widths[0]),
+        succ_mat=_dense_blocks(n, n_b, inst.succ_indptr, inst.succ_idx, widths[1]),
+        in_blk=_dense_blocks(n, n_b, inst.in_indptr, inst.in_idx, widths[2]),
+        out_blk=_dense_blocks(n, n_b, inst.out_indptr, inst.out_idx, widths[3]),
+        in_idx=in_idx, in_owner=in_owner, in_valid=in_valid, in_ptr=in_ptr,
+        out_idx=out_idx, out_owner=out_owner, out_valid=out_valid,
+        out_ptr=out_ptr, proc_time=pt, access_time=at, data_size=ds,
+        compat=compat,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# state packing                                                                #
+# --------------------------------------------------------------------------- #
+def _fill_seq_rows(sol: Solution, seq_row, seq_len_row, mpred_row,
+                   msucc_row) -> None:
+    """Write one walk's padded sequences + machine links from a Solution."""
+    for pp, s in enumerate(sol.proc_seq):
+        seq_len_row[pp] = len(s)
+        if s:
+            seq_row[pp, : len(s)] = s
+            arr = np.asarray(s, dtype=_I32)
+            if len(arr) >= 2:
+                mpred_row[arr[1:]] = arr[:-1]
+                msucc_row[arr[:-1]] = arr[1:]
+
+
+def pack_state(ip: InstancePack, sols: list[Solution], scheds,
+               seed: int) -> dict:
+    """Walk state pytree (host numpy; becomes device-resident on launch)."""
+    w = len(sols)
+    seq = np.full((w, ip.p_b, ip.s_b), -1, dtype=_I32)
+    seq_len = np.zeros((w, ip.p_b), dtype=_I32)
+    assign = np.zeros((w, ip.n_b), dtype=_I32)
+    mem = np.zeros((w, ip.d_b), dtype=_I32)
+    mpred = np.full((w, ip.n_b), -1, dtype=_I32)
+    msucc = np.full((w, ip.n_b), -1, dtype=_I32)
+    start = np.zeros((w, ip.n_b))
+    finish = np.zeros((w, ip.n_b))
+    for i, (sol, sched) in enumerate(zip(sols, scheds)):
+        assign[i, : ip.n] = sol.assign
+        mem[i, : ip.d] = sol.mem
+        _fill_seq_rows(sol, seq[i], seq_len[i], mpred[i], msucc[i])
+        start[i, : ip.n] = sched.start
+        finish[i, : ip.n] = sched.finish
+    cur_mk = np.array([s.makespan for s in scheds])
+    return {
+        "seq": seq, "seq_len": seq_len, "assign": assign, "mem": mem,
+        "mpred": mpred, "msucc": msucc, "start": start, "finish": finish,
+        "cur_mk": cur_mk, "best_mk": cur_mk.copy(),
+        "best_seq": seq.copy(), "best_seq_len": seq_len.copy(),
+        "best_assign": assign.copy(), "best_mem": mem.copy(),
+        "tabu": np.full((w, ip.n_b * ip.p_b * (ip.n_b + 2)), -1, dtype=_I32),
+        "unimproved": np.zeros(w, dtype=_I32),
+        "accepted": np.zeros(w, dtype=_I32),
+        "active": np.ones(w, dtype=bool),
+        "it": np.int64(0),
+        "n_exact": np.int64(0),
+        "n_approx": np.int64(0),
+        "n_perturb": np.int64(0),
+        "stop": np.bool_(False),       # max_evals tripped mid-round
+        "overflow": np.bool_(False),   # crit set exceeded crit_cap
+        "key": np.asarray([seed & 0xFFFFFFFF, 0x6A09E667], dtype=np.uint32),
+        "seed": np.uint32(seed & 0xFFFFFFFF),
+    }
+
+
+def unpack_solution(ip: InstancePack, seq, seq_len, assign, mem, w: int) -> Solution:
+    proc_seq = [
+        [int(t) for t in seq[w, pp, : int(seq_len[w, pp])]]
+        for pp in range(ip.p)
+    ]
+    return Solution(assign=np.asarray(assign[w, : ip.n], dtype=np.int64).copy(),
+                    mem=np.asarray(mem[w, : ip.d], dtype=np.int64).copy(),
+                    proc_seq=proc_seq)
+
+
+# --------------------------------------------------------------------------- #
+# jitted launch                                                                #
+# --------------------------------------------------------------------------- #
+def _seq_cumsum(v, block: int = 128):
+    """Exclusive-to-inclusive prefix sums replaying ``np.cumsum``'s
+    left-to-right order exactly (a scan over blocks whose bodies unroll the
+    sequential adds).  Returns ``(rows, e + 1)`` with a leading zero column,
+    exactly like the numpy engine's cumsum-difference scaffold."""
+    import jax
+    import jax.numpy as jnp
+
+    rows, e = v.shape
+    assert e % block == 0
+    chunks = jnp.moveaxis(v.reshape(rows, e // block, block), 1, 0)
+
+    def body(carry, chunk):
+        outs = []
+        for jj in range(block):
+            carry = carry + chunk[:, jj]
+            outs.append(carry)
+        return carry, jnp.stack(outs, axis=1)
+
+    _, outs = jax.lax.scan(body, jnp.zeros((rows,), v.dtype), chunks)
+    c = jnp.moveaxis(outs, 0, 1).reshape(rows, e)
+    return jnp.concatenate([jnp.zeros((rows, 1), v.dtype), c], axis=1)
+
+
+def _mix32_jnp(jnp, *words):
+    h = jnp.uint32(0x811C9DC5)
+    for wd in words:
+        h = h ^ jnp.asarray(wd).astype(jnp.uint32)
+        h = h * jnp.uint32(0x9E3779B1)
+        h = h ^ (h >> 16)
+        h = h * jnp.uint32(0x85EBCA6B)
+        h = h ^ (h >> 13)
+    return h
+
+
+def ia_from_pack(ip: InstancePack) -> dict:
+    """Instance arrays as a launch-argument pytree (vmappable over a stacked
+    leading axis for the batch sweep).  ``n``/``p`` ride along as scalars so
+    per-instance real sizes survive shared-bucket padding."""
+    out = {f.name: np.asarray(getattr(ip, f.name))
+           for f in dataclasses.fields(InstancePack)
+           if f.name not in ("n", "p", "d", "n_b", "p_b", "s_b", "d_b")}
+    out["n"] = np.int64(ip.n)
+    out["p"] = np.int64(ip.p)
+    return out
+
+
+def _round_loop(ia: dict, w_count: int, params: TSParams,
+                crit_cap: int, rounds: int, cfg: DeviceConfig):
+    """Build the ``rounds``-bounded while_loop over full tabu rounds.
+
+    ``ia`` holds the (possibly traced) instance arrays; every static shape
+    is read off them, so the same body traces for one instance (arrays as
+    constants) or under ``vmap`` (arrays as batched tracers).  Returns
+    ``run(state, series)``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels import schedule_dp as sdp
+
+    ia = {k: jnp.asarray(v) for k, v in ia.items()}  # no-op on tracers
+    pred_mat = ia["pred_mat"]
+    succ_mat = ia["succ_mat"]
+    in_blk = ia["in_blk"]
+    out_blk = ia["out_blk"]
+    in_idx = ia["in_idx"]
+    in_owner = ia["in_owner"]
+    in_valid = ia["in_valid"]
+    in_ptr = ia["in_ptr"]
+    out_idx = ia["out_idx"]
+    out_owner = ia["out_owner"]
+    out_valid = ia["out_valid"]
+    out_ptr = ia["out_ptr"]
+    proc_time = ia["proc_time"]
+    access_time = ia["access_time"]
+    data_size = ia["data_size"]
+    compat = ia["compat"]
+    n = ia["n"]                      # real sizes: scalars, traced in batch
+    p = ia["p"]
+    n_b, p_b = proc_time.shape
+    s_b = n_b + 1
+    d_b = data_size.shape[0]
+    W, C, K = w_count, crit_cap, params.top_k
+    NPOS = params.n_change_core_positions
+    M_n7 = 2 * C
+    M_cc = C * p_b * (NPOS + 1)
+    M = M_n7 + M_cc
+    WIN = APPROX_WINDOW
+    R = rounds
+    max_unimp = params.max_unimproved
+    max_iters = _NONE if params.max_iters is None else np.int64(params.max_iters)
+    max_evals = _NONE if params.max_evals is None else np.int64(params.max_evals)
+    Din = in_blk.shape[1]
+    Dout = out_blk.shape[1]
+
+    wi = jnp.arange(W)
+    f64 = jnp.float64
+    INF = jnp.inf
+
+    def take_w(arr2d, idx):
+        """arr2d (W, n), idx (W, ...) → gathered values per walk."""
+        flat = idx.reshape(W, -1)
+        out = jnp.take_along_axis(arr2d, flat, axis=1)
+        return out.reshape(idx.shape)
+
+    def durations(assign_rows, mem_rows):
+        """``solution.durations`` replayed bit-exactly per row: global
+        sequential cumsum over the CSR edge values, then indptr differences."""
+        def io_time(idx, owner, valid, ptr):
+            rate = access_time[assign_rows[:, owner], mem_rows[:, idx]]
+            vals = jnp.where(valid[None, :],
+                             data_size[idx][None, :] * rate, 0.0)
+            c = _seq_cumsum(vals)
+            return c[:, ptr[1:]] - c[:, ptr[:-1]]
+
+        t_in = io_time(in_idx, in_owner, in_valid, in_ptr)
+        t_out = io_time(out_idx, out_owner, out_valid, out_ptr)
+        pt = proc_time[jnp.arange(n_b)[None, :], assign_rows]
+        return t_in + pt + t_out
+
+    def eval_candidates(assign_c, mpred_c, mem_rows):
+        """Exact DP on (rows, n_b) candidate rows: durations + forward sweep."""
+        dur = durations(assign_c, mem_rows)
+        start, finish, _, n_done, _ = sdp.sweep_xla(
+            pred_mat, succ_mat, dur, mpred_c,
+            jnp.full_like(mpred_c, -1), n, tails=False)
+        feasible = n_done == n
+        valid_col = (jnp.arange(n_b) < n)[None, :]
+        mk = jnp.where(feasible,
+                       jnp.where(valid_col, finish, -INF).max(axis=1), INF)
+        return start, finish, feasible, mk
+
+    def seq_positions(seq, seq_len):
+        """(mach, pos) (W, n_b) from the padded sequence tensor."""
+        col = jnp.arange(s_b)[None, None, :]
+        validp = col < seq_len[:, :, None]
+        t_safe = jnp.where(validp, seq, n_b)
+        mach = jnp.full((W, n_b + 1), -1, _I32)
+        pos = jnp.full((W, n_b + 1), -1, _I32)
+        pvals = jnp.broadcast_to(jnp.arange(p_b, dtype=_I32)[None, :, None],
+                                 (W, p_b, s_b))
+        svals = jnp.broadcast_to(jnp.arange(s_b, dtype=_I32)[None, None, :],
+                                 (W, p_b, s_b))
+        w3 = jnp.broadcast_to(wi[:, None, None], (W, p_b, s_b))
+        mach = mach.at[w3, t_safe].set(pvals)
+        pos = pos.at[w3, t_safe].set(svals)
+        return mach[:, :n_b], pos[:, :n_b]
+
+    def links_from_seq(seq, seq_len):
+        col = jnp.arange(s_b)[None, None, :]
+        validp = col < seq_len[:, :, None]
+        t_safe = jnp.where(validp, seq, n_b)
+        w3 = jnp.broadcast_to(wi[:, None, None], (W, p_b, s_b - 1))
+        mp = jnp.full((W, n_b + 1), -1, _I32)
+        ms = jnp.full((W, n_b + 1), -1, _I32)
+        mp = mp.at[w3, t_safe[:, :, 1:]].set(
+            jnp.where(validp[:, :, 1:], t_safe[:, :, :-1], -1).astype(_I32))
+        ms = ms.at[w3, t_safe[:, :, :-1]].set(
+            jnp.where(validp[:, :, 1:], t_safe[:, :, 1:], -1).astype(_I32))
+        # trash slots may have been written with junk; cols >= n_b dropped,
+        # but a t_safe of n_b inside the slice writes to col n_b only ✓
+        return mp[:, :n_b], ms[:, :n_b]
+
+    def new_seq_at(seq_dst, u, j, k, cc, i):
+        """Element ``i`` of each move's post-move destination sequence
+        (``eval_batch._new_seq_at`` verbatim)."""
+        t = i - (i > j)
+        orig = t + ((~cc) & (t >= k))
+        g = jnp.take_along_axis(
+            seq_dst, jnp.clip(orig, 0, s_b - 1)[..., None], axis=-1)[..., 0]
+        return jnp.where(i == j, u, g)
+
+    def reprice(mem_w, u, b, blk_mat):
+        """Vectorized AT re-pricing with the scalar sequential sum order:
+        per-move block list, left-to-right adds over zero-padded width."""
+        blocks = blk_mat[jnp.clip(u, 0, n_b - 1)]            # (W, M, L)
+        ok = blocks >= 0
+        bsafe = jnp.where(ok, blocks, 0)
+        memv = mem_w[wi[:, None, None], bsafe]               # (W, M, L)
+        vals = jnp.where(ok, data_size[bsafe]
+                         * access_time[b[..., None], memv], 0.0)
+        tot = jnp.zeros(vals.shape[:2], f64)
+        for jj in range(vals.shape[2]):
+            tot = tot + vals[:, :, jj]
+        return tot
+
+    # ---------------------------------------------------------------- round
+    def round_body(st):
+        it = st["it"] + 1
+        active0 = st["active"]
+        start, finish = st["start"], st["finish"]
+        seq, seq_len = st["seq"], st["seq_len"]
+        assign, mem = st["assign"], st["mem"]
+        mpred, msucc = st["mpred"], st["msucc"]
+        cur_mk, best_mk = st["cur_mk"], st["best_mk"]
+
+        dur_all = finish - start
+        q_all = sdp.backward_q_xla(succ_mat, dur_all, msucc, n,
+                                   active0[:, None])
+        r_all = start
+        slack = cur_mk[:, None] - r_all - q_all
+        crit = (slack <= _EPS * jnp.maximum(1.0, cur_mk)[:, None]) \
+            & (jnp.arange(n_b) < n)[None, :] & active0[:, None]
+        crit_count = crit.sum(axis=1)
+        overflow = (active0 & (crit_count > C)).any()
+
+        # ---------------- move generation (N7) -------------------------- #
+        col = jnp.arange(s_b)[None, None, :]
+        validp = col < seq_len[:, :, None]
+        seq_c = jnp.clip(seq, 0, n_b - 1)
+        c_on = jnp.where(validp, take_w(crit, seq_c.reshape(W, -1)
+                                        ).reshape(W, p_b, s_b), False)
+        prev = jnp.pad(c_on[:, :, :-1], ((0, 0), (0, 0), (1, 0)))
+        nxt = jnp.pad(c_on[:, :, 1:], ((0, 0), (0, 0), (0, 1)))
+        starts_m = c_on & ~prev
+        ends_m = c_on & ~nxt
+        sidx = jnp.broadcast_to(jnp.arange(s_b)[None, None, :], c_on.shape)
+        lo_run = jax.lax.cummax(jnp.where(starts_m, sidx, -1), axis=2)
+        hi_run = jax.lax.cummin(jnp.where(ends_m, sidx, s_b + 7), axis=2,
+                                reverse=True)
+        keep = c_on & (hi_run - lo_run >= 1)
+        flat_keep = keep.reshape(W, p_b * s_b)
+        order_n7 = jnp.argsort(~flat_keep, axis=1, stable=True)[:, :C]
+        slot_ok = jnp.take_along_axis(flat_keep, order_n7, axis=1)
+        pp_n7 = (order_n7 // s_b).astype(_I32)
+        ss_n7 = (order_n7 % s_b).astype(_I32)
+        u_n7 = jnp.take_along_axis(seq_c.reshape(W, -1), order_n7, axis=1)
+        lo_n7 = jnp.take_along_axis(lo_run.reshape(W, -1), order_n7, axis=1)
+        hi_n7 = jnp.take_along_axis(hi_run.reshape(W, -1), order_n7, axis=1)
+        # two moves per slot: [to-head, to-tail] interleaved
+        n7_task = jnp.repeat(u_n7, 2, axis=1)
+        n7_src_p = jnp.repeat(pp_n7, 2, axis=1)
+        n7_src_s = jnp.repeat(ss_n7, 2, axis=1)
+        n7_dst = jnp.stack([lo_n7, hi_n7], axis=2).reshape(W, M_n7)
+        n7_valid = jnp.stack(
+            [slot_ok & (ss_n7 != lo_n7), slot_ok & (ss_n7 != hi_n7)],
+            axis=2).reshape(W, M_n7)
+
+        # ---------------- move generation (change-core) ----------------- #
+        crit_order = jnp.argsort(~crit, axis=1, stable=True)[:, :C]   # (W, C)
+        crit_ok = jnp.take_along_axis(crit, crit_order, axis=1)
+        u_cc = crit_order.astype(_I32)
+        mach, pos = seq_positions(seq, seq_len)
+        a_cc = take_w(mach, u_cc)                                     # (W, C)
+        k_cc = take_w(pos, u_cc)
+        r_starts = jnp.where(validp, take_w(r_all, seq_c.reshape(W, -1)
+                                            ).reshape(W, p_b, s_b), INF)
+        r_u = take_w(r_all, u_cc)                                     # (W, C)
+        anchor = jax.vmap(jax.vmap(jnp.searchsorted, in_axes=(0, None)),
+                          in_axes=(0, 0))(r_starts, r_u)              # (W, p_b, C)
+        anchor = jnp.moveaxis(anchor, 1, 2)                           # (W, C, p_b)
+        lo = jnp.maximum(0, anchor - NPOS // 2)
+        hi = jnp.minimum(seq_len[:, None, :], lo + NPOS)
+        jj = lo[..., None] + jnp.arange(NPOS + 1)[None, None, None, :]
+        cc_valid = (jj <= hi[..., None]) \
+            & crit_ok[:, :, None, None] \
+            & compat[jnp.clip(u_cc, 0, n_b - 1)][..., None] \
+            & (jnp.arange(p_b)[None, None, :, None] != a_cc[:, :, None, None]) \
+            & (jnp.arange(p_b)[None, None, :, None] < p)
+        cc_task = jnp.broadcast_to(u_cc[:, :, None, None], jj.shape)
+        cc_src_p = jnp.broadcast_to(a_cc[:, :, None, None], jj.shape)
+        cc_src_s = jnp.broadcast_to(k_cc[:, :, None, None], jj.shape)
+        cc_dst_p = jnp.broadcast_to(
+            jnp.arange(p_b, dtype=_I32)[None, None, :, None], jj.shape)
+
+        mv_task = jnp.concatenate(
+            [n7_task, cc_task.reshape(W, M_cc)], axis=1).astype(_I32)
+        mv_src_p = jnp.concatenate(
+            [n7_src_p, cc_src_p.reshape(W, M_cc)], axis=1).astype(_I32)
+        mv_src_s = jnp.concatenate(
+            [n7_src_s, cc_src_s.reshape(W, M_cc)], axis=1).astype(_I32)
+        mv_dst_p = jnp.concatenate(
+            [n7_src_p, cc_dst_p.reshape(W, M_cc)], axis=1).astype(_I32)
+        mv_dst_s = jnp.concatenate(
+            [n7_dst, jj.reshape(W, M_cc)], axis=1).astype(_I32)
+        mv_cc = jnp.concatenate(
+            [jnp.zeros((W, M_n7), bool), jnp.ones((W, M_cc), bool)], axis=1)
+        mv_valid = jnp.concatenate(
+            [n7_valid, cc_valid.reshape(W, M_cc)], axis=1) & active0[:, None]
+        n_moves = mv_valid.sum(axis=1)
+        participates = active0 & (n_moves > 0)
+        n_approx = st["n_approx"] + jnp.where(active0, n_moves, 0).sum()
+
+        # sanitize masked slots so downstream gathers stay in bounds
+        mv_task = jnp.where(mv_valid, mv_task, 0)
+        mv_src_p = jnp.where(mv_valid, mv_src_p, 0)
+        mv_src_s = jnp.where(mv_valid, mv_src_s, 0)
+        mv_dst_p = jnp.where(mv_valid, mv_dst_p, 0)
+        mv_dst_s = jnp.where(mv_valid, mv_dst_s, 0)
+
+        # ---------------- approximate evaluation ------------------------ #
+        seq_dst = jnp.take_along_axis(
+            seq, mv_dst_p[:, :, None], axis=1)                        # (W, M, s_b)
+        dur_u = take_w(dur_all, mv_task)
+        q_u = take_w(q_all, mv_task)
+        t_in_cc = reprice(mem, mv_task, mv_dst_p, in_blk)
+        t_out_cc = reprice(mem, mv_task, mv_dst_p, out_blk)
+        d_cc = t_in_cc + proc_time[mv_task, mv_dst_p] + t_out_cc
+        dur_u = jnp.where(mv_cc, d_cc, dur_u)
+        q_u = jnp.where(mv_cc, take_w(q_all, mv_task)
+                        - take_w(dur_all, mv_task) + d_cc, q_u)
+        finite = jnp.isfinite(dur_u)
+        dst_len = jnp.take_along_axis(seq_len, mv_dst_p, axis=1)
+        new_len = dst_len + mv_cc
+        w_lo = jnp.where(mv_cc, mv_dst_s, jnp.minimum(mv_src_s, mv_dst_s))
+        w_hi = jnp.minimum(new_len, w_lo + WIN)
+        est = jnp.zeros((W, M), f64)
+        xp = jnp.take_along_axis(
+            seq_dst, jnp.clip(w_lo - 1, 0, s_b - 1)[..., None], axis=2)[..., 0]
+        xp = jnp.clip(xp, 0, n_b - 1)
+        prev_finish = jnp.where(
+            w_lo > 0, take_w(r_all, xp) + take_w(dur_all, xp), 0.0)
+        win_of = jnp.full((W, M, n_b + 1), -1, jnp.int8)
+        win_heads = jnp.zeros((W, M, WIN), f64)
+        mi = jnp.arange(M)[None, :]
+        wim = jnp.broadcast_to(wi[:, None], (W, M))
+        for s in range(WIN):
+            idxp = w_lo + s
+            act = mv_valid & (idxp < w_hi)
+            x = new_seq_at(seq_dst, mv_task, mv_dst_s, mv_src_s, mv_cc, idxp)
+            x = jnp.where(act, x, 0)
+            preds = pred_mat[x]                                       # (W, M, Dp)
+            pok = preds >= 0
+            psafe = jnp.where(pok, preds, n_b)
+            tpos = jnp.take_along_axis(win_of, psafe, axis=2)         # (W, M, Dp)
+            in_win = tpos >= 0
+            head_at = jnp.take_along_axis(
+                win_heads, jnp.clip(tpos, 0, WIN - 1).astype(jnp.int32), axis=2)
+            pclip = jnp.clip(preds, 0, n_b - 1)
+            dsel = jnp.where(preds == mv_task[..., None],
+                             dur_u[..., None], take_w(dur_all, pclip))
+            f_win = head_at + dsel
+            f_def = take_w(r_all, pclip) + take_w(dur_all, pclip)
+            f = jnp.where(pok, jnp.where(in_win, f_win, f_def), -INF)
+            head = jnp.maximum(prev_finish, f.max(axis=2))
+            win_of = win_of.at[wim, mi, jnp.where(act, x, n_b)].set(
+                jnp.int8(s))
+            win_heads = win_heads.at[:, :, s].set(head)
+            is_u = x == mv_task
+            dx = jnp.where(is_u, dur_u, take_w(dur_all, x))
+            qx = jnp.where(is_u, q_u, take_w(q_all, x))
+            est = jnp.where(act, jnp.maximum(est, head + qx), est)
+            prev_finish = jnp.where(act, head + dx, prev_finish)
+        tailm = mv_valid & (w_hi < new_len)
+        x_t = new_seq_at(seq_dst, mv_task, mv_dst_s, mv_src_s, mv_cc, w_hi)
+        x_t = jnp.clip(jnp.where(tailm, x_t, 0), 0, n_b - 1)
+        est = jnp.where(tailm,
+                        jnp.maximum(est, prev_finish + take_w(q_all, x_t)),
+                        est)
+        est = jnp.where(finite & mv_valid, est, INF)
+
+        # ---------------- sort, tabu pre-filter ------------------------- #
+        order = jnp.argsort(est, axis=1, stable=True)
+        est_s = jnp.take_along_axis(est, order, axis=1)
+        task_s = jnp.take_along_axis(mv_task, order, axis=1)
+        srcp_s = jnp.take_along_axis(mv_src_p, order, axis=1)
+        srcs_s = jnp.take_along_axis(mv_src_s, order, axis=1)
+        dstp_s = jnp.take_along_axis(mv_dst_p, order, axis=1)
+        dsts_s = jnp.take_along_axis(mv_dst_s, order, axis=1)
+        cc_s = jnp.take_along_axis(mv_cc, order, axis=1)
+        valid_s = jnp.take_along_axis(mv_valid & finite, order, axis=1)
+        # resulting configuration (task, dst_proc, machine-pred-after-move)
+        seq_dst_s = jnp.take_along_axis(seq, dstp_s[:, :, None], axis=1)
+        pi = dsts_s - 1
+        pio = pi + ((~cc_s) & (pi >= srcs_s))
+        pred_cfg = jnp.where(
+            pi >= 0,
+            jnp.take_along_axis(seq_dst_s,
+                                jnp.clip(pio, 0, s_b - 1)[..., None],
+                                axis=2)[..., 0],
+            -2)
+        cfg_idx = (task_s.astype(jnp.int64) * p_b + dstp_s) * (n_b + 2) \
+            + (pred_cfg + 2)
+        expiry = jnp.take_along_axis(
+            st["tabu"], jnp.clip(cfg_idx, 0, st["tabu"].shape[1] - 1), axis=1)
+        is_tabu = expiry >= it
+        adm = valid_s & ~(is_tabu & (est_s >= best_mk[:, None]))
+        n_adm = adm.sum(axis=1)
+        adm_perm = jnp.argsort(~adm, axis=1, stable=True)
+        # compact admissible move attributes, in est order
+        def comp(a):
+            return jnp.take_along_axis(a, adm_perm, axis=1)
+        c_task, c_srcp, c_srcs, c_dstp, c_dsts, c_cc, c_tabu = (
+            comp(task_s), comp(srcp_s), comp(srcs_s), comp(dstp_s),
+            comp(dsts_s), comp(cc_s), comp(is_tabu))
+
+        # ---------------- chunked top-K exact evaluation ----------------- #
+        def apply_and_eval(sel_idx, slot_ok, *, arrs=None):
+            """sel_idx (W, kk) indices into a move-array bundle — by default
+            the compact admissible arrays (top-K chunks); the perturbation
+            path passes the raw unsorted arrays instead and reuses this
+            exact splice arithmetic at width 1."""
+            task_a, srcs_a, dstp_a, dsts_a, cc_a = arrs if arrs is not None \
+                else (c_task, c_srcs, c_dstp, c_dsts, c_cc)
+            kk = sel_idx.shape[1]
+            u = jnp.take_along_axis(task_a, sel_idx, axis=1)
+            ksrc = jnp.take_along_axis(srcs_a, sel_idx, axis=1)
+            b = jnp.take_along_axis(dstp_a, sel_idx, axis=1)
+            j = jnp.take_along_axis(dsts_a, sel_idx, axis=1)
+            ccm = jnp.take_along_axis(cc_a, sel_idx, axis=1)
+            u = jnp.where(slot_ok, u, 0)
+            b = jnp.where(slot_ok, b, 0)
+            x = take_w(mpred, u)
+            y = take_w(msucc, u)
+            w3 = jnp.broadcast_to(wi[:, None], (W, kk))
+            k3 = jnp.broadcast_to(jnp.arange(kk)[None, :], (W, kk))
+            mp = jnp.concatenate(
+                [jnp.broadcast_to(mpred[:, None, :], (W, kk, n_b)),
+                 jnp.full((W, kk, 1), -1, _I32)], axis=2)
+            ms = jnp.concatenate(
+                [jnp.broadcast_to(msucc[:, None, :], (W, kk, n_b)),
+                 jnp.full((W, kk, 1), -1, _I32)], axis=2)
+            asg = jnp.concatenate(
+                [jnp.broadcast_to(assign[:, None, :], (W, kk, n_b)),
+                 jnp.zeros((W, kk, 1), _I32)], axis=2)
+
+            def safe(t, okm):
+                return jnp.where(okm & slot_ok, t, n_b)
+
+            ms = ms.at[w3, k3, safe(x, x >= 0)].set(y)
+            mp = mp.at[w3, k3, safe(y, y >= 0)].set(x)
+            dseq = jnp.take_along_axis(seq, b[:, :, None], axis=1)
+            same = ~ccm
+            len_dst = jnp.take_along_axis(seq_len, b, axis=1) - same
+            pi2 = j - 1
+            pio2 = pi2 + (same & (pi2 >= ksrc))
+            pred_t = jnp.where(
+                pi2 >= 0,
+                jnp.take_along_axis(dseq, jnp.maximum(pio2, 0)[..., None],
+                                    axis=2)[..., 0], -1)
+            sio2 = j + (same & (j >= ksrc))
+            succ_t = jnp.where(
+                j < len_dst,
+                jnp.take_along_axis(dseq,
+                                    jnp.minimum(sio2, s_b - 1)[..., None],
+                                    axis=2)[..., 0], -1)
+            mp = mp.at[w3, k3, safe(u, slot_ok)].set(pred_t.astype(_I32))
+            ms = ms.at[w3, k3, safe(u, slot_ok)].set(succ_t.astype(_I32))
+            ms = ms.at[w3, k3, safe(pred_t, pred_t >= 0)].set(u)
+            mp = mp.at[w3, k3, safe(succ_t, succ_t >= 0)].set(u)
+            asg = asg.at[w3, k3, safe(u, slot_ok)].set(b)
+            mem_rows = jnp.broadcast_to(
+                mem[:, None, :], (W, kk, d_b)).reshape(W * kk, d_b)
+            start_c, finish_c, feas, mk = eval_candidates(
+                asg[:, :, :n_b].reshape(W * kk, n_b),
+                mp[:, :, :n_b].reshape(W * kk, n_b), mem_rows)
+            return (start_c.reshape(W, kk, n_b), finish_c.reshape(W, kk, n_b),
+                    feas.reshape(W, kk), mk.reshape(W, kk))
+
+        def chunk_cond(cs):
+            return cs["live"]
+
+        def chunk_body(cs):
+            pos, examined = cs["pos"], cs["examined"]
+            done = cs["done"] \
+                | (cs["found"] & (examined >= K)) \
+                | (pos >= n_adm)
+            avail = jnp.maximum(max_evals - cs["n_exact"], 0)
+            want = jnp.where(participates & ~done,
+                             jnp.minimum(K, n_adm - pos), 0)
+            before = jnp.cumsum(want) - want
+            size = jnp.clip(jnp.minimum(want, avail - before), 0, want)
+            done = done | (want > 0) & (size <= 0)
+            live = (size > 0).any()
+
+            def do_eval(cs):
+                sel = pos[:, None] + jnp.arange(K)[None, :]
+                slot_ok = jnp.arange(K)[None, :] < size[:, None]
+                sel = jnp.where(slot_ok, jnp.clip(sel, 0, M - 1), 0)
+                start_c, finish_c, feas, mk = apply_and_eval(sel, slot_ok)
+                tabu_slot = jnp.take_along_axis(c_tabu, sel, axis=1)
+                elig = slot_ok & feas \
+                    & ~(tabu_slot & (mk >= best_mk[:, None]))
+                mk_m = jnp.where(elig, mk, INF)
+                jmin = jnp.argmin(mk_m, axis=1)
+                cand_mk = jnp.take_along_axis(mk_m, jmin[:, None], axis=1)[:, 0]
+                better = cand_mk < cs["chosen_mk"]
+                sel_j = jnp.take_along_axis(sel, jmin[:, None], axis=1)[:, 0]
+                ch_start = jnp.take_along_axis(
+                    start_c, jmin[:, None, None], axis=1)[:, 0]
+                ch_finish = jnp.take_along_axis(
+                    finish_c, jmin[:, None, None], axis=1)[:, 0]
+                return {
+                    "pos": pos + size,
+                    "examined": examined + size,
+                    "done": done,
+                    "found": cs["found"] | better,
+                    "chosen_i": jnp.where(better, sel_j, cs["chosen_i"]),
+                    "chosen_mk": jnp.where(better, cand_mk, cs["chosen_mk"]),
+                    "chosen_start": jnp.where(better[:, None], ch_start,
+                                              cs["chosen_start"]),
+                    "chosen_finish": jnp.where(better[:, None], ch_finish,
+                                               cs["chosen_finish"]),
+                    "n_exact": cs["n_exact"] + size.sum(),
+                    "live": live,
+                }
+
+            def no_eval(cs):
+                out = dict(cs)
+                out["done"] = done
+                out["live"] = live
+                return out
+
+            return jax.lax.cond(live, do_eval, no_eval, cs)
+
+        chunk0 = {
+            "pos": jnp.zeros(W, jnp.int64),
+            "examined": jnp.zeros(W, jnp.int64),
+            "done": ~participates,
+            "found": jnp.zeros(W, bool),
+            "chosen_i": jnp.zeros(W, jnp.int64),
+            "chosen_mk": jnp.full(W, INF),
+            "chosen_start": jnp.zeros((W, n_b)),
+            "chosen_finish": jnp.zeros((W, n_b)),
+            "n_exact": st["n_exact"],
+            "live": jnp.asarray(True),
+        }
+        cs = jax.lax.while_loop(chunk_cond, chunk_body, chunk0)
+        n_exact = cs["n_exact"]
+        found = cs["found"] & participates
+
+        # ---------------- stalled walks: budget stop or perturbation ----- #
+        exhausted = participates & ~found & (n_exact >= max_evals)
+        stop = st["stop"] | exhausted.any()
+        perturb_w = participates & ~found & (n_exact < max_evals) \
+            if cfg.perturb else jnp.zeros(W, bool)
+
+        # perturbation: one threefry-random move per stalled walk, evaluated
+        # as one extra (W, 1) candidate batch through the SAME splice/eval
+        # path as the top-K chunks.  Everything (pick included) lives inside
+        # the cond branch, so unstalled rounds — the overwhelming majority —
+        # pay nothing for it.
+        any_perturb = perturb_w.any()
+
+        def perturb_eval(n_exact):
+            fold = (wi.astype(jnp.uint32) * jnp.uint32(131071)
+                    + it.astype(jnp.uint32))
+            sub = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+                jax.random.wrap_key_data(st["key"]), fold)
+            valid_perm = jnp.argsort(~mv_valid, axis=1, stable=True)
+            ridx = jax.vmap(
+                lambda kk, hi2: jax.random.randint(kk, (), 0, jnp.maximum(hi2, 1)))(
+                sub, n_moves)
+            pick = jnp.take_along_axis(valid_perm, ridx[:, None], axis=1)
+            slot_ok = perturb_w[:, None]
+            start_c, finish_c, feas, mk = apply_and_eval(
+                pick, slot_ok,
+                arrs=(mv_task, mv_src_s, mv_dst_p, mv_dst_s, mv_cc))
+            ok = perturb_w & feas[:, 0]
+
+            def g(a):
+                return jnp.take_along_axis(a, pick, axis=1)[:, 0]
+
+            return (ok, g(mv_task), g(mv_src_p), g(mv_src_s), g(mv_dst_p),
+                    g(mv_dst_s), g(mv_cc), start_c[:, 0], finish_c[:, 0],
+                    mk[:, 0], n_exact + jnp.where(perturb_w, 1, 0).sum())
+
+        def perturb_skip(n_exact):
+            z = jnp.zeros(W, _I32)
+            return (jnp.zeros(W, bool), z, z, z, z, z,
+                    jnp.zeros(W, bool), jnp.zeros((W, n_b)),
+                    jnp.zeros((W, n_b)), jnp.full(W, INF), n_exact)
+
+        (p_ok, p_u, p_a, p_k, p_b2, p_j, p_cc, p_start, p_finish, p_mk,
+         n_exact) = jax.lax.cond(any_perturb, perturb_eval, perturb_skip,
+                                 n_exact)
+
+        # ---------------- commit (accepted move or feasible perturbation) #
+        commit = found | p_ok
+        cm_u = jnp.where(found, jnp.take_along_axis(
+            c_task, cs["chosen_i"][:, None], axis=1)[:, 0], p_u).astype(_I32)
+        cm_a = jnp.where(found, jnp.take_along_axis(
+            c_srcp, cs["chosen_i"][:, None], axis=1)[:, 0], p_a).astype(_I32)
+        cm_k = jnp.where(found, jnp.take_along_axis(
+            c_srcs, cs["chosen_i"][:, None], axis=1)[:, 0], p_k).astype(_I32)
+        cm_b = jnp.where(found, jnp.take_along_axis(
+            c_dstp, cs["chosen_i"][:, None], axis=1)[:, 0], p_b2).astype(_I32)
+        cm_j = jnp.where(found, jnp.take_along_axis(
+            c_dsts, cs["chosen_i"][:, None], axis=1)[:, 0], p_j).astype(_I32)
+        cm_cc = jnp.where(found, jnp.take_along_axis(
+            c_cc, cs["chosen_i"][:, None], axis=1)[:, 0], p_cc)
+        new_start = jnp.where(found[:, None], cs["chosen_start"],
+                              jnp.where(p_ok[:, None], p_start, start))
+        new_finish = jnp.where(found[:, None], cs["chosen_finish"],
+                               jnp.where(p_ok[:, None], p_finish, finish))
+        new_mk = jnp.where(found, cs["chosen_mk"],
+                           jnp.where(p_ok, p_mk, cur_mk))
+
+        # tabu the destroyed configuration (accepted moves only)
+        mp_before = take_w(mpred, cm_u[:, None])[:, 0]
+        destroyed = (cm_u.astype(jnp.int64) * p_b + cm_a) * (n_b + 2) \
+            + jnp.where(mp_before >= 0, mp_before, -2) + 2
+        h_cc = _mix32_jnp(jnp, st["seed"], wi, it, jnp.uint32(1))
+        h_n7 = _mix32_jnp(jnp, st["seed"], wi, it, jnp.uint32(0))
+        tenure = jnp.where(
+            cm_cc, p + h_cc.astype(jnp.int64) % (2 * p),
+            n + h_n7.astype(jnp.int64) % jnp.maximum(n, 1))
+        tabu_t = st["tabu"].at[
+            wi, jnp.where(found, destroyed,
+                          st["tabu"].shape[1])].set(
+            jnp.where(found, (it + tenure).astype(_I32), 0),
+            mode="drop")
+
+        # sequence splice (dst row gets remove+insert arithmetic; cc moves
+        # also rewrite the source row)
+        ii = jnp.arange(s_b)[None, :]
+        dst_row = jnp.take_along_axis(seq, cm_b[:, None, None], axis=1)[:, 0]
+        new_len_b = jnp.take_along_axis(seq_len, cm_b[:, None], axis=1)[:, 0] \
+            + cm_cc
+        t2 = ii - (ii > cm_j[:, None])
+        orig2 = t2 + ((~cm_cc)[:, None] & (t2 >= cm_k[:, None]))
+        g2 = jnp.take_along_axis(dst_row, jnp.clip(orig2, 0, s_b - 1), axis=1)
+        new_dst = jnp.where(ii == cm_j[:, None], cm_u[:, None], g2)
+        new_dst = jnp.where(ii < new_len_b[:, None], new_dst, -1).astype(_I32)
+        src_row = jnp.take_along_axis(seq, cm_a[:, None, None], axis=1)[:, 0]
+        src_len = jnp.take_along_axis(seq_len, cm_a[:, None], axis=1)[:, 0]
+        rem = jnp.take_along_axis(
+            src_row, jnp.clip(ii + (ii >= cm_k[:, None]), 0, s_b - 1), axis=1)
+        new_src = jnp.where(ii < (src_len - 1)[:, None], rem, -1).astype(_I32)
+        parange = jnp.arange(p_b)[None, :, None]
+        m_src = (parange == cm_a[:, None, None]) & (commit & cm_cc)[:, None, None]
+        m_dst = (parange == cm_b[:, None, None]) & commit[:, None, None]
+        seq_n = jnp.where(m_src, new_src[:, None, :], seq)
+        seq_n = jnp.where(m_dst, new_dst[:, None, :], seq_n)
+        parange2 = jnp.arange(p_b)[None, :]
+        seq_len_n = seq_len \
+            + ((parange2 == cm_b[:, None]) & commit[:, None]
+               & cm_cc[:, None]).astype(_I32) \
+            - ((parange2 == cm_a[:, None]) & commit[:, None]
+               & cm_cc[:, None]).astype(_I32)
+        assign_n = assign.at[
+            wi, jnp.where(commit, cm_u, n_b)].set(cm_b, mode="drop")
+        mp_n, ms_n = links_from_seq(seq_n, seq_len_n)
+
+        start_n = jnp.where(commit[:, None], new_start, start)
+        finish_n = jnp.where(commit[:, None], new_finish, finish)
+        cur_mk_n = jnp.where(commit, new_mk, cur_mk)
+        accepted_n = st["accepted"] + found.astype(_I32)
+
+        improved = found & (cur_mk_n < best_mk - 1e-9)
+        best_mk_n = jnp.where(improved, cur_mk_n, best_mk)
+        unimp = jnp.where(
+            improved, 0,
+            st["unimproved"] + (participates & ~exhausted).astype(_I32))
+        active_n = active0 & (n_moves > 0) & (unimp < max_unimp)
+
+        st_out = dict(st)
+        st_out.update(
+            it=it, n_exact=n_exact, n_approx=n_approx, stop=stop,
+            n_perturb=st["n_perturb"] + perturb_w.sum(),
+            overflow=st["overflow"] | overflow,
+            seq=seq_n, seq_len=seq_len_n, assign=assign_n,
+            mpred=mp_n, msucc=ms_n,
+            start=start_n, finish=finish_n, cur_mk=cur_mk_n,
+            best_mk=best_mk_n, unimproved=unimp, accepted=accepted_n,
+            active=active_n, tabu=tabu_t,
+            best_seq=jnp.where(improved[:, None, None], seq_n, st["best_seq"]),
+            best_seq_len=jnp.where(improved[:, None], seq_len_n,
+                                   st["best_seq_len"]),
+            best_assign=jnp.where(improved[:, None], assign_n,
+                                  st["best_assign"]),
+            best_mem=jnp.where(improved[:, None], mem, st["best_mem"]),
+        )
+        return st_out, overflow
+
+    # ------------------------------------------------------------- run
+    def run(st, series):
+        def cond(carry):
+            st, series, r = carry
+            return (r < R) & st["active"].any() & ~st["stop"] \
+                & ~st["overflow"] & (st["it"] < max_iters) \
+                & (st["n_exact"] < max_evals)
+
+        def body(carry):
+            st, series, r = carry
+            st2, overflow = round_body(st)
+
+            def advance(_):
+                s2 = dict(series)
+                s2["best_mk"] = series["best_mk"].at[r].set(st2["best_mk"])
+                s2["cur_mk"] = series["cur_mk"].at[r].set(st2["cur_mk"])
+                s2["n_exact"] = series["n_exact"].at[r].set(st2["n_exact"])
+                s2["it"] = series["it"].at[r].set(st2["it"])
+                s2["active"] = series["active"].at[r].set(st2["active"])
+                s2["ran"] = series["ran"].at[r].set(True)
+                return st2, s2, r + 1
+
+            return jax.lax.cond(overflow,
+                                lambda _: (dict(st, overflow=jnp.asarray(True)),
+                                           series, r + R),
+                                advance, None)
+
+        st, series, _ = jax.lax.while_loop(
+            cond, body, (st, series, jnp.int64(0)))
+        return st, series
+
+    return run
+
+
+def _get_launch(ip: InstancePack, w_count: int, params: TSParams,
+                crit_cap: int, cfg: DeviceConfig, *, batch: int = 0):
+    """Fetch/compile the jitted launch for these buckets (bounded LRU).
+
+    The instance arrays are always call ARGUMENTS, never baked-in jit
+    constants: the cache key below describes only shapes and static search
+    parameters, so two different instances that share buckets must be able
+    to share one compiled program.  (``batch=I`` additionally vmaps over a
+    leading instance axis of the arrays and the state.)"""
+    import jax
+
+    key = (ip.n_b, ip.p_b, ip.d_b, w_count, crit_cap, cfg.sync_every,
+           params.top_k, params.n_change_core_positions,
+           params.max_unimproved, params.max_iters, params.max_evals,
+           cfg.perturb, cfg.donate, ip.in_blk.shape[1], ip.out_blk.shape[1],
+           len(ip.in_idx), len(ip.out_idx), batch)
+    fn = _LAUNCHES.get(key)
+    if fn is not None:
+        return fn, False
+
+    def one(ia, st, series):
+        return _round_loop(ia, w_count, params, crit_cap, cfg.sync_every,
+                           cfg)(st, series)
+
+    if batch:
+        fn = jax.jit(jax.vmap(one, in_axes=(0, 0, 0)),
+                     donate_argnums=(1,) if cfg.donate else ())
+    else:
+        fn = jax.jit(one, donate_argnums=(1,) if cfg.donate else ())
+    _LAUNCHES.put(key, fn)
+    # fresh=True: the first call will pay jit compilation — our own LRU is
+    # the source of truth (no reliance on private jax attributes)
+    return fn, True
+
+
+def _series_buffers(rounds: int, w_count: int) -> dict:
+    import jax.numpy as jnp
+
+    return {
+        "best_mk": jnp.zeros((rounds, w_count)),
+        "cur_mk": jnp.zeros((rounds, w_count)),
+        "n_exact": jnp.zeros(rounds, jnp.int64),
+        "it": jnp.zeros(rounds, jnp.int64),
+        "active": jnp.zeros((rounds, w_count), bool),
+        "ran": jnp.zeros(rounds, bool),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# host driver                                                                  #
+# --------------------------------------------------------------------------- #
+def device_multiwalk(
+    inst: Instance,
+    inits: list[Solution],
+    params: TSParams | None = None,
+    *,
+    config: DeviceConfig | None = None,
+    init_labels: list[str] | None = None,
+    on_iteration=None,
+    on_improvement=None,
+) -> MultiWalkResult:
+    """Drop-in ``tabu_multiwalk`` with the round loop on-device.
+
+    Callbacks fire at sync boundaries (every ``config.sync_every`` rounds)
+    rather than per iteration; Algorithm 3 runs at the same boundaries when
+    ``params.mem_update_period < MEM_UPDATE_DISABLED``.
+    """
+    from jax.experimental import enable_x64
+
+    params = params or TSParams()
+    cfg = config or DeviceConfig()
+    w_count = len(inits)
+    assert w_count >= 1, "device_multiwalk needs at least one init"
+    labels = init_labels or [f"walk{w}" for w in range(w_count)]
+    t0 = time.monotonic()
+
+    cur_sols = [memory_update(inst, init, refresh_every=params.mem_refresh_every,
+                              scalar=params.mem_update_scalar)
+                for init in inits]
+    scheds = [exact_schedule(inst, s) for s in cur_sols]
+    assert all(s is not None for s in scheds), "initial solutions must be acyclic"
+
+    ip = pack_instance(inst)
+    state = pack_state(ip, cur_sols, scheds, params.seed)
+    crit_cap = cfg.crit_cap or _auto_crit_cap(inst, cur_sols, scheds)
+
+    best_mk0 = state["best_mk"].copy()
+    histories: list[list[tuple[int, float]]] = [
+        [(0, float(best_mk0[w]))] for w in range(w_count)]
+    g_best = float(best_mk0.min())
+    g_hist: list[tuple[int, float]] = [(0, g_best)]
+    init_mk_min = g_best
+    mem_updates_on = params.mem_update_period < MEM_UPDATE_DISABLED
+    stop_reason = "converged"
+    n_exact_host = 0  # host-side Alg-3 re-evaluations (mirrors legacy +1)
+    compile_s = 0.0
+
+    def _fire(cb, improved: bool, it: int, cur_min: float) -> bool:
+        if cb is None:
+            return False
+        ev = TSEvent(iteration=it, best_makespan=g_best,
+                     current_makespan=cur_min,
+                     elapsed=time.monotonic() - t0,
+                     n_exact_evals=int(state["n_exact"]) + n_exact_host,
+                     n_approx_evals=int(state["n_approx"]),
+                     improved=improved)
+        return bool(cb(ev))
+
+    with enable_x64():
+        import jax.numpy as jnp
+
+        ia_j = {k2: jnp.asarray(v) for k2, v in ia_from_pack(ip).items()}
+        while True:
+            if time.monotonic() - t0 > params.time_limit:
+                stop_reason = "time_limit"
+                break
+            tc = time.monotonic()
+            launch, fresh = _get_launch(ip, w_count, params, crit_cap, cfg)
+            state_j = {k2: jnp.asarray(v) for k2, v in state.items()}
+            state_j, series = launch(ia_j, state_j,
+                                     _series_buffers(cfg.sync_every, w_count))
+            if fresh:
+                # first call on these buckets pays jit compilation; the
+                # benches report it separately from steady-state throughput
+                compile_s += time.monotonic() - tc
+            state = {k2: np.array(v) for k2, v in state_j.items()}  # writable
+            ser = {k2: np.asarray(v) for k2, v in series.items()}
+
+            g_improved = False
+            for r in range(cfg.sync_every):
+                if not ser["ran"][r]:
+                    break
+                it_r = int(ser["it"][r])
+                for w in range(w_count):
+                    bmk = float(ser["best_mk"][r, w])
+                    if bmk < histories[w][-1][1] - 1e-9:
+                        histories[w].append((it_r, bmk))
+                nb = float(ser["best_mk"][r].min())
+                if nb < g_best:
+                    g_best = nb
+                    g_hist.append((it_r, g_best))
+                    g_improved = True
+
+            if state["overflow"]:
+                state["overflow"] = np.bool_(False)
+                crit_cap = max(crit_cap * 2, 32)
+                if crit_cap > ip.n_b:
+                    crit_cap = ip.n_b
+                continue
+
+            it_now = int(state["it"])
+            cur_min = float(state["cur_mk"][state["active"]].min()) \
+                if state["active"].any() else g_best
+            if g_improved and _fire(on_improvement, True, it_now, cur_min):
+                stop_reason = "callback"
+                break
+            if _fire(on_iteration, g_improved, it_now, cur_min):
+                stop_reason = "callback"
+                break
+
+            if not state["active"].any():
+                stop_reason = "converged"
+                break
+            if params.max_iters is not None and it_now >= params.max_iters:
+                stop_reason = "max_iters"
+                break
+            if params.max_evals is not None and \
+                    int(state["n_exact"]) >= params.max_evals:
+                stop_reason = "max_evals"
+                break
+            if state["stop"]:
+                stop_reason = "max_evals"
+                break
+
+            if mem_updates_on:
+                for w in range(w_count):
+                    if not state["active"][w]:
+                        continue
+                    sol_w = unpack_solution(ip, state["seq"], state["seq_len"],
+                                            state["assign"], state["mem"], w)
+                    sol_w = memory_update(
+                        inst, sol_w, refresh_every=params.mem_refresh_every,
+                        scalar=params.mem_update_scalar)
+                    sched_w = exact_schedule(inst, sol_w)
+                    assert sched_w is not None
+                    n_exact_host += 1
+                    _write_walk(ip, state, w, sol_w, sched_w)
+                    if sched_w.makespan < state["best_mk"][w] - 1e-9:
+                        state["best_mk"][w] = sched_w.makespan
+                        state["best_seq"][w] = state["seq"][w]
+                        state["best_seq_len"][w] = state["seq_len"][w]
+                        state["best_assign"][w] = state["assign"][w]
+                        state["best_mem"][w] = state["mem"][w]
+                        histories[w].append((it_now, float(sched_w.makespan)))
+                        if sched_w.makespan < g_best:
+                            g_best = float(sched_w.makespan)
+                            g_hist.append((it_now, g_best))
+
+    best_sols = [
+        unpack_solution(ip, state["best_seq"], state["best_seq_len"],
+                        state["best_assign"], state["best_mem"], w)
+        for w in range(w_count)
+    ]
+    best_mk = np.array(state["best_mk"])
+    if mem_updates_on:
+        # in-launch incumbents were taken with a frozen allocation; re-run
+        # Alg-3 on any capacity-infeasible walk best so the report upholds
+        # the legacy drivers' feasibility contract
+        best_sols, best_mk = _repair_bests(inst, params, best_sols, best_mk)
+    gi = int(np.argmin(best_mk))
+    per_walk = [
+        WalkInfo(init_label=labels[w], initial_makespan=histories[w][0][1],
+                 best_makespan=float(best_mk[w]), best=best_sols[w],
+                 history=histories[w],
+                 stop_reason=stop_reason if state["active"][w] else "converged")
+        for w in range(w_count)
+    ]
+    res = MultiWalkResult(
+        best=best_sols[gi],
+        best_makespan=float(best_mk[gi]),
+        initial_makespan=init_mk_min,
+        iterations=int(state["it"]),
+        elapsed=time.monotonic() - t0,
+        history=g_hist,
+        n_exact_evals=int(state["n_exact"]) + n_exact_host,
+        n_approx_evals=int(state["n_approx"]),
+        stop_reason=stop_reason,
+        n_perturbations=int(state["n_perturb"]),
+        walks=w_count,
+        per_walk=per_walk,
+    )
+    res.compile_seconds = compile_s  # type: ignore[attr-defined]
+    return res
+
+
+def _repair_bests(inst: Instance, params: TSParams, best_sols, best_mk):
+    """Re-run Algorithm 3 on capacity-infeasible walk incumbents (their
+    allocation was frozen between syncs) and refresh their makespans."""
+    from .solution import memory_feasible
+
+    for w, sol in enumerate(best_sols):
+        sched = exact_schedule(inst, sol)
+        assert sched is not None
+        if memory_feasible(inst, sol, sched):
+            continue
+        sol = memory_update(inst, sol, refresh_every=params.mem_refresh_every,
+                            scalar=params.mem_update_scalar)
+        sched = exact_schedule(inst, sol)
+        assert sched is not None
+        best_sols[w] = sol
+        best_mk[w] = sched.makespan
+    return best_sols, best_mk
+
+
+def _auto_crit_cap(inst, sols, scheds) -> int:
+    from ..kernels import schedule_dp as sdp
+    from .solution import heads_tails
+
+    worst = 16
+    for sol, sched in zip(sols, scheds):
+        _, _, _, crit = heads_tails(inst, sol, sched)
+        worst = max(worst, int(crit.sum()))
+    # no headroom factor: overflow escalation doubles the bucket on demand,
+    # and a tight capacity halves the padded neighborhood the window kernel
+    # and sorts chew through every round
+    return min(sdp.bucket(worst, 32), inst.n_tasks)
+
+
+def _write_walk(ip: InstancePack, state: dict, w: int, sol: Solution,
+                sched) -> None:
+    """Host-side overwrite of one walk's packed rows (after Alg-3)."""
+    state["seq"][w] = -1
+    state["seq_len"][w] = 0
+    state["mpred"][w] = -1
+    state["msucc"][w] = -1
+    _fill_seq_rows(sol, state["seq"][w], state["seq_len"][w],
+                   state["mpred"][w], state["msucc"][w])
+    state["assign"][w, : ip.n] = sol.assign
+    state["mem"][w, : ip.d] = sol.mem
+    state["start"][w] = 0.0
+    state["finish"][w] = 0.0
+    state["start"][w, : ip.n] = sched.start
+    state["finish"][w, : ip.n] = sched.finish
+    state["cur_mk"][w] = sched.makespan
+
+
+# --------------------------------------------------------------------------- #
+# instance-vmapped sweeps                                                      #
+# --------------------------------------------------------------------------- #
+def solve_instances(
+    instances: list[Instance],
+    inits: list[list[Solution]],
+    params: TSParams | None = None,
+    *,
+    config: DeviceConfig | None = None,
+) -> list[MultiWalkResult]:
+    """Run the device engine over a batch of same-bucket instances in one
+    vmapped compiled call per sync — an entire Table-II row per launch.
+
+    All instances are padded to shared shape buckets and their real sizes
+    ride along as traced scalars; every loop update is masked, and JAX's
+    ``while_loop`` batching keeps finished instances' state frozen, so
+    per-instance results are identical to per-instance ``device_multiwalk``
+    calls with the same ``crit_cap`` (asserted by
+    ``tests/test_device_search.py``).  Budgets apply per instance; wall time
+    is checked between launches.  Algorithm 3 runs host-side at sync
+    boundaries exactly like the single-instance driver.
+    """
+    import jax
+    from jax.experimental import enable_x64
+
+    from ..kernels import schedule_dp as sdp
+
+    params = params or TSParams()
+    cfg = config or DeviceConfig()
+    n_inst = len(instances)
+    assert n_inst >= 1 and len(inits) == n_inst
+    w_count = len(inits[0])
+    assert all(len(x) == w_count for x in inits), "equal walk counts required"
+    t0 = time.monotonic()
+
+    cur_sols, scheds = [], []
+    for inst, init_list in zip(instances, inits):
+        sols = [memory_update(inst, s, refresh_every=params.mem_refresh_every,
+                              scalar=params.mem_update_scalar)
+                for s in init_list]
+        sc = [exact_schedule(inst, s) for s in sols]
+        assert all(x is not None for x in sc), "initial solutions must be acyclic"
+        cur_sols.append(sols)
+        scheds.append(sc)
+
+    # shared buckets: every padded axis is the max bucket across the batch
+    n_b = max(sdp.bucket(i.n_tasks) for i in instances)
+    p_b = max(i.n_procs for i in instances)
+    d_b = max(sdp.bucket(i.n_data) for i in instances)
+    base = [pack_instance(i, n_b=n_b, p_b=p_b, d_b=d_b) for i in instances]
+    widths = tuple(max(getattr(ip2, f).shape[1] for ip2 in base)
+                   for f in ("pred_mat", "succ_mat", "in_blk", "out_blk"))
+    e_b = (max(len(ip2.in_idx) for ip2 in base),
+           max(len(ip2.out_idx) for ip2 in base))
+    packs = [pack_instance(i, n_b=n_b, p_b=p_b, d_b=d_b, widths=widths,
+                           e_b=e_b) for i in instances]
+    crit_cap = cfg.crit_cap or max(
+        _auto_crit_cap(i, s, sc)
+        for i, s, sc in zip(instances, cur_sols, scheds))
+
+    states = [pack_state(ip2, s, sc, params.seed)
+              for ip2, s, sc in zip(packs, cur_sols, scheds)]
+    init_best = np.stack([st["best_mk"] for st in states])   # (I, W)
+    histories = [[[(0, float(init_best[i, w]))] for w in range(w_count)]
+                 for i in range(n_inst)]
+    g_hist = [[(0, float(init_best[i].min()))] for i in range(n_inst)]
+    g_best = [h[0][1] for h in g_hist]
+    mem_updates_on = params.mem_update_period < MEM_UPDATE_DISABLED
+    n_exact_host = np.zeros(n_inst, dtype=np.int64)
+    timed_out = False
+    compile_s = 0.0
+
+    state = {k: np.stack([st[k] for st in states]) for k in states[0]}
+    ia = {k: np.stack([ia_from_pack(ip2)[k] for ip2 in packs])
+          for k in ia_from_pack(packs[0])}
+
+    with enable_x64():
+        import jax.numpy as jnp
+
+        ia_j = {k: jnp.asarray(v) for k, v in ia.items()}
+        while True:
+            if time.monotonic() - t0 > params.time_limit:
+                timed_out = True
+                break
+            tc = time.monotonic()
+            launch, fresh = _get_launch(packs[0], w_count, params, crit_cap,
+                                        cfg, batch=n_inst)
+            state_j = {k: jnp.asarray(v) for k, v in state.items()}
+            series0 = jax.vmap(
+                lambda _: _series_buffers(cfg.sync_every, w_count))(
+                jnp.arange(n_inst))
+            state_j, series = launch(ia_j, state_j, series0)
+            if fresh:
+                compile_s += time.monotonic() - tc
+            state = {k: np.array(v) for k, v in state_j.items()}  # writable
+            ser = {k: np.asarray(v) for k, v in series.items()}
+
+            for i in range(n_inst):
+                for r in range(cfg.sync_every):
+                    if not ser["ran"][i, r]:
+                        continue
+                    it_r = int(ser["it"][i, r])
+                    for w in range(w_count):
+                        bmk = float(ser["best_mk"][i, r, w])
+                        if bmk < histories[i][w][-1][1] - 1e-9:
+                            histories[i][w].append((it_r, bmk))
+                    nb = float(ser["best_mk"][i, r].min())
+                    if nb < g_best[i]:
+                        g_best[i] = nb
+                        g_hist[i].append((it_r, nb))
+
+            if state["overflow"].any():
+                state["overflow"][:] = False
+                crit_cap = min(max(crit_cap * 2, 32), n_b)
+                continue
+
+            done = ~state["active"].any(axis=1) | state["stop"]
+            if params.max_iters is not None:
+                done |= state["it"] >= params.max_iters
+            if params.max_evals is not None:
+                done |= state["n_exact"] >= params.max_evals
+            if done.all():
+                break
+
+            if mem_updates_on:
+                for i in range(n_inst):
+                    if done[i]:
+                        continue
+                    sub = {k: state[k][i] for k in state}
+                    for w in range(w_count):
+                        if not sub["active"][w]:
+                            continue
+                        sol_w = unpack_solution(packs[i], sub["seq"],
+                                                sub["seq_len"], sub["assign"],
+                                                sub["mem"], w)
+                        sol_w = memory_update(
+                            instances[i], sol_w,
+                            refresh_every=params.mem_refresh_every,
+                            scalar=params.mem_update_scalar)
+                        sched_w = exact_schedule(instances[i], sol_w)
+                        assert sched_w is not None
+                        n_exact_host[i] += 1
+                        _write_walk(packs[i], sub, w, sol_w, sched_w)
+                        if sched_w.makespan < sub["best_mk"][w] - 1e-9:
+                            sub["best_mk"][w] = sched_w.makespan
+                            sub["best_seq"][w] = sub["seq"][w]
+                            sub["best_seq_len"][w] = sub["seq_len"][w]
+                            sub["best_assign"][w] = sub["assign"][w]
+                            sub["best_mem"][w] = sub["mem"][w]
+                            it_now = int(sub["it"])
+                            histories[i][w].append(
+                                (it_now, float(sched_w.makespan)))
+                            if sched_w.makespan < g_best[i]:
+                                g_best[i] = float(sched_w.makespan)
+                                g_hist[i].append((it_now, g_best[i]))
+                    for k in state:
+                        state[k][i] = sub[k]
+
+    results = []
+    for i in range(n_inst):
+        active = state["active"][i]
+        if not active.any():
+            stop_reason = "converged"
+        elif timed_out:
+            stop_reason = "time_limit"
+        elif params.max_iters is not None and \
+                state["it"][i] >= params.max_iters:
+            stop_reason = "max_iters"
+        elif state["stop"][i] or (params.max_evals is not None and
+                                  state["n_exact"][i] >= params.max_evals):
+            stop_reason = "max_evals"
+        else:
+            stop_reason = "time_limit"
+        best_mk = np.array(state["best_mk"][i])
+        best_sols = [
+            unpack_solution(packs[i], state["best_seq"][i],
+                            state["best_seq_len"][i], state["best_assign"][i],
+                            state["best_mem"][i], w)
+            for w in range(w_count)
+        ]
+        if mem_updates_on:
+            best_sols, best_mk = _repair_bests(instances[i], params,
+                                               best_sols, best_mk)
+        gi = int(np.argmin(best_mk))
+        per_walk = [
+            WalkInfo(init_label=f"walk{w}",
+                     initial_makespan=histories[i][w][0][1],
+                     best_makespan=float(best_mk[w]), best=best_sols[w],
+                     history=histories[i][w],
+                     stop_reason=stop_reason if active[w] else "converged")
+            for w in range(w_count)
+        ]
+        res = MultiWalkResult(
+            best=best_sols[gi], best_makespan=float(best_mk[gi]),
+            initial_makespan=float(init_best[i].min()),
+            iterations=int(state["it"][i]),
+            elapsed=time.monotonic() - t0,
+            history=g_hist[i],
+            n_exact_evals=int(state["n_exact"][i]) + int(n_exact_host[i]),
+            n_approx_evals=int(state["n_approx"][i]),
+            stop_reason=stop_reason, walks=w_count, per_walk=per_walk,
+        )
+        res.compile_seconds = compile_s  # type: ignore[attr-defined]
+        results.append(res)
+    return results

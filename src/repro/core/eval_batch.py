@@ -21,9 +21,13 @@ The NumPy reference path is **bit-exact** with the scalar oracle: every
 reduction is a float ``max`` (order-independent) or replays the scalar
 code's exact summation order (the cumsum-difference segment sums, the
 per-bucket event cumsum).  The optional JAX path (``backend="jax"``) runs
-the forward/backward sweeps as one ``jax.jit``-compiled level loop on
+the forward/backward sweeps through ``repro.kernels.schedule_dp`` — the
+gather-side dense level loop (XLA) or the fused Pallas kernel on TPU — on
 padded shape buckets; it matches to float32 tolerance (bit-exact under
 ``jax_enable_x64``) and falls back to NumPy when JAX is unavailable.
+Compiled sweeps are cached per shape bucket in a bounded LRU
+(``BatchEvaluator.cache_info()`` reports hits/misses/size for the
+benchmarks).
 
 Backend selection is a string flag (``"numpy"`` | ``"jax"`` | ``"scalar"``)
 carried by ``TSParams.backend`` and plumbed through ``repro.solve``;
@@ -52,6 +56,7 @@ from .solution import (
 __all__ = [
     "BACKENDS",
     "APPROX_WINDOW",
+    "LRUCache",
     "BatchEval",
     "BatchEvaluator",
     "MoveBatch",
@@ -64,6 +69,45 @@ __all__ = [
 BACKENDS = ("numpy", "jax", "scalar")
 
 APPROX_WINDOW = 12  # approximate-evaluation look-ahead window (ops)
+
+
+class LRUCache:
+    """Tiny bounded mapping for compiled-function caches.
+
+    The PR-2 ``_jax_fns`` dict grew without bound (one entry per exact
+    ``(K, n, tails)`` combination it ever saw); this keys on *shape buckets*
+    upstream and evicts least-recently-used entries past ``maxsize``, and
+    counts hits/misses so benchmarks can report compile-cache behavior.
+    """
+
+    def __init__(self, maxsize: int = 16):
+        self.maxsize = int(maxsize)
+        self._d: "dict" = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        try:
+            val = self._d.pop(key)
+        except KeyError:
+            self.misses += 1
+            return None
+        self._d[key] = val  # move to MRU position
+        self.hits += 1
+        return val
+
+    def put(self, key, val) -> None:
+        self._d.pop(key, None)
+        self._d[key] = val
+        while len(self._d) > self.maxsize:
+            self._d.pop(next(iter(self._d)))
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def info(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "currsize": len(self._d), "maxsize": self.maxsize}
 
 
 # --------------------------------------------------------------------------- #
@@ -325,7 +369,8 @@ class BatchEvaluator:
     is precomputed once; ``evaluate`` then runs pure array code.
     """
 
-    def __init__(self, inst: Instance, backend: str = "numpy"):
+    def __init__(self, inst: Instance, backend: str = "numpy",
+                 jax_impl: str | None = None, cache_size: int = 16):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         if backend == "jax" and not _jax_available():
@@ -338,6 +383,7 @@ class BatchEvaluator:
             backend = "numpy"
         self.inst = inst
         self.backend = backend
+        self.jax_impl = jax_impl  # None = auto (pallas on TPU, xla elsewhere)
         n = inst.n_tasks
         # conjunctive edge list (src, dst) and degrees
         self._edge_src = np.repeat(np.arange(n), np.diff(inst.succ_indptr))
@@ -347,7 +393,12 @@ class BatchEvaluator:
         # owner task of every input/output CSR slot (for batched durations)
         self._in_owner = np.repeat(np.arange(n), np.diff(inst.in_indptr))
         self._out_owner = np.repeat(np.arange(n), np.diff(inst.out_indptr))
-        self._jax_fns: dict = {}
+        self._jax_fns = LRUCache(maxsize=cache_size)
+        self._graph = None  # lazy schedule_dp.DenseGraph
+
+    def cache_info(self) -> dict:
+        """Compiled-sweep cache counters (`{hits, misses, currsize, maxsize}`)."""
+        return self._jax_fns.info()
 
     # -- public API -------------------------------------------------------- #
     def evaluate(
@@ -760,111 +811,66 @@ def _jax_available() -> bool:
 
 def _jax_sweeps(engine: BatchEvaluator, packed: PackedSolutions, dur: np.ndarray,
                 tails: bool):
-    """Forward DP (+ optional backward Q) as one jitted level loop.
+    """Forward DP (+ optional backward Q) via ``repro.kernels.schedule_dp``.
 
-    Shapes are bucketed (K padded to the next power of two) so recompiles are
-    bounded; padding rows have no machine edges and zero durations, i.e. they
-    are trivially feasible and discarded on the way out.  Peaks/lifetimes stay
-    on the shared NumPy sweep — they are sort-bound and off the hot path.
+    Shapes are bucketed (K padded to the next power of two, n to the dense
+    graph's bucket) so recompiles are bounded, and compiled sweeps live in
+    the engine's LRU keyed on those buckets.  Padding rows have no machine
+    edges and zero durations (trivially feasible, discarded on the way out);
+    padding tasks pop at level 0 with start = finish = 0 and never touch real
+    tasks.  Peaks/lifetimes stay on the shared NumPy sweep — they are
+    sort-bound and off the hot path.
+
+    The implementation is selected by ``engine.jax_impl``: ``None`` auto
+    (the fused Pallas kernel on TPU, the XLA gather lowering elsewhere),
+    ``"xla"``, ``"pallas"``, or ``"pallas_interpret"`` (the kernel through
+    the interpreter — CPU parity tests).
     """
+    import jax
     import jax.numpy as jnp
+
+    from ..kernels import schedule_dp as sdp
 
     n = engine.inst.n_tasks
     k = packed.k
     kp = 1 << max(0, (k - 1).bit_length())  # next pow2 ≥ k
     fdtype = jnp.zeros(0).dtype  # float32 unless jax_enable_x64
+    if engine._graph is None:
+        engine._graph = sdp.dense_graph(engine.inst)
+    graph = engine._graph
+    n_b = graph.n_b
 
-    def pad(a, fill):
-        if a.shape[0] == kp:
-            return a
-        return np.concatenate([a, np.full((kp - a.shape[0],) + a.shape[1:], fill, a.dtype)])
+    def pad(a, fill, dt):
+        out = np.full((kp, n_b), fill, dtype=dt)
+        out[:k, :n] = a
+        return out
 
-    dur_p = pad(dur, 0.0)
-    mpred_p = pad(packed.mpred, -1)
-    msucc_p = pad(packed.msucc, -1)
-
-    key = (kp, n, bool(tails))
+    impl = engine.jax_impl or sdp.default_impl()
+    key = (kp, n_b, bool(tails), impl, str(fdtype))
     fn = engine._jax_fns.get(key)
     if fn is None:
-        fn = _build_jax_sweeps(engine, kp, tails)
-        engine._jax_fns[key] = fn
-    start, finish, level, n_done, q = fn(
-        jnp.asarray(dur_p, fdtype), jnp.asarray(mpred_p), jnp.asarray(msucc_p)
-    )
-    start = np.asarray(start, np.float64)[:k]
-    finish = np.asarray(finish, np.float64)[:k]
-    level = np.asarray(level, np.int64)[:k]
-    feasible = np.asarray(n_done)[:k] == n
-    qq = np.asarray(q, np.float64)[:k] if tails else None
-    return start, finish, level, feasible, qq
-
-
-def _build_jax_sweeps(engine: BatchEvaluator, kp: int, tails: bool):
-    import jax
-    import jax.numpy as jnp
-
-    inst = engine.inst
-    n = inst.n_tasks
-    src = jnp.asarray(engine._edge_src)
-    dst = jnp.asarray(engine._edge_dst)
-    base_indeg = jnp.asarray(engine._base_indeg)
-    base_outdeg = jnp.asarray(engine._base_outdeg)
-    rows_kp = jnp.arange(kp)[:, None]
-    neg_inf = -jnp.inf
-
-    def _level_loop(deg0, links, dur, edge_src, edge_dst):
-        """Shared level-synchronous sweep: forward (value = start + dur, relax
-        successors) and backward (value = dur + max-child-Q, relax
-        predecessors) are the same scatter-max recursion on (K, n+1) padded
-        slots — slot ``n`` swallows updates for missing machine links."""
-
-        def cond(state):
-            _, _, _, _, ready, _, lev = state
-            return jnp.logical_and(ready.any(), lev <= n)
-
-        def body(state):
-            acc, val, level, deg, ready, done, lev = state
-            v = acc[:, :n] + dur                         # node value when popped
-            val = jnp.where(ready, v, val)
-            level = jnp.where(ready, lev, level)
-            contrib = jnp.where(ready[:, edge_src], val[:, edge_src], neg_inf)
-            acc = acc.at[:, edge_dst].max(contrib)
-            deg = deg.at[:, edge_dst].add(-ready[:, edge_src].astype(deg.dtype))
-            lnk = jnp.where(ready & (links >= 0), links, n)  # n = dummy slot
-            acc = acc.at[rows_kp, lnk].max(jnp.where(ready, val, neg_inf))
-            deg = deg.at[rows_kp, lnk].add(-ready.astype(deg.dtype))
-            done = done | ready
-            ready = (deg[:, :n] == 0) & ~done
-            return acc, val, level, deg, ready, done, lev + 1
-
-        acc = jnp.zeros((kp, n + 1), dur.dtype)
-        val = jnp.zeros((kp, n), dur.dtype)
-        level = jnp.zeros((kp, n), jnp.int32)
-        deg = jnp.concatenate([deg0, jnp.ones((kp, 1), deg0.dtype)], axis=1)
-        done = jnp.zeros((kp, n), bool)
-        ready = (deg[:, :n] == 0) & ~done
-        acc, val, level, deg, ready, done, _ = jax.lax.while_loop(
-            cond, body, (acc, val, level, deg, ready, done, jnp.int32(0))
-        )
-        return acc[:, :n], val, done, level
-
-    @jax.jit
-    def sweeps(dur, mpred, msucc):
-        indeg0 = base_indeg[None, :] + (mpred >= 0)
-        start, finish, done, level = _level_loop(indeg0, msucc, dur, src, dst)
-        n_done = done.sum(axis=1)
-        start = jnp.where(done, start, 0.0)
-        if tails:
-            outdeg0 = base_outdeg[None, :] + (msucc >= 0)
-            # poison incomplete (cyclic) rows so the backward pass skips them
-            outdeg0 = jnp.where((n_done == n)[:, None], outdeg0, -1)
-            # mirror the scalar heads_tails operands (dur = finish - start)
-            _, q, _, _ = _level_loop(outdeg0, mpred, finish - start, dst, src)
+        if impl == "xla":
+            pred_mat = jnp.asarray(graph.pred_mat)
+            succ_mat = jnp.asarray(graph.succ_mat)
+            fn = jax.jit(lambda d, mp, ms: sdp.sweep_xla(
+                pred_mat, succ_mat, d, mp, ms, n, tails=tails))
         else:
-            q = jnp.zeros_like(dur)
-        return start, finish, level, n_done, q
-
-    return sweeps
+            adj = np.asarray(graph.adj)
+            fn = lambda d, mp, ms: sdp.sweep_pallas(  # noqa: E731
+                adj, d, mp, n, tails=tails,
+                interpret=impl == "pallas_interpret")
+        engine._jax_fns.put(key, fn)
+    start, finish, level, n_done, q = fn(
+        jnp.asarray(pad(dur, 0.0, np.float64), fdtype),
+        jnp.asarray(pad(packed.mpred, -1, np.int64)),
+        jnp.asarray(pad(packed.msucc, -1, np.int64)),
+    )
+    start = np.asarray(start, np.float64)[:k, :n]
+    finish = np.asarray(finish, np.float64)[:k, :n]
+    level = np.asarray(level, np.int64)[:k, :n]
+    feasible = np.asarray(n_done)[:k] == n
+    qq = np.asarray(q, np.float64)[:k, :n] if tails else None
+    return start, finish, level, feasible, qq
 
 
 # --------------------------------------------------------------------------- #

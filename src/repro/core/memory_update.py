@@ -24,17 +24,32 @@ Both produce the same allocation: the pop order replays the scalar argmin
 key exactly, and the capacity probe accumulates the same event deltas in the
 same sorted order (ties in ``(time, Δ)`` carry equal deltas, so any stable
 order yields identical prefix sums).
+
+Amortized refreshes (``refresh_every > 1``) probe capacity against *stale*
+lifetimes, so the raw placement pass can overshoot a finite tier under the
+true final schedule — a quiet violation of Alg-3's capacity invariant that
+the seed tolerated.  Both paths therefore finish with a shared
+**verify-and-evict epilogue**: peaks are recomputed under the exact final
+schedule and, while any finite tier overflows, the least-critical resident
+block (the reverse of the pop key) is demoted to its next slower compatible
+tier.  Every returned allocation is capacity-feasible.  The verification
+cannot be skipped for any ``refresh_every`` — even at 1, each probe uses
+lifetimes from *before* the placement it is probing, and the placement
+itself shifts durations — but it usually finds nothing and costs one extra
+DP + peaks sweep against the ~``n_data/refresh_every`` DPs of the update
+pass itself.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .mdfg import Instance
+from .mdfg import InfeasibleInstanceError, Instance
 from .solution import (
     Solution,
     data_lifetimes,
     exact_schedule,
     heads_tails,
+    memory_peaks,
 )
 
 __all__ = ["memory_update"]
@@ -77,11 +92,48 @@ def memory_update(
 
     ``scalar=True`` selects the original per-block Python implementation
     (the parity oracle / benchmark baseline); the default fast path computes
-    the identical allocation with array sweeps.
+    the identical allocation with array sweeps.  Both finish with the shared
+    verify-and-evict epilogue, so the returned allocation is always
+    capacity-feasible under its exact schedule.
     """
     if scalar:
-        return _memory_update_scalar(inst, sol, refresh_every)
-    return _memory_update_fast(inst, sol, refresh_every)
+        out = _memory_update_scalar(inst, sol, refresh_every)
+    else:
+        out = _memory_update_fast(inst, sol, refresh_every)
+    return _capacity_repair(inst, out)
+
+
+def _capacity_repair(inst: Instance, sol: Solution) -> Solution:
+    """Verify peaks under the exact schedule; demote least-critical blocks
+    out of overflowing finite tiers until every capacity holds.  Mutates and
+    returns ``sol`` (already a copy inside :func:`memory_update`)."""
+    if not (~np.isinf(inst.mem_cap)).any():
+        return sol
+    level_order = np.argsort(inst.mem_level, kind="stable")
+    while True:
+        sched = exact_schedule(inst, sol)
+        assert sched is not None, "memory repair requires an acyclic solution"
+        peaks = memory_peaks(inst, sol, sched)
+        over = np.nonzero(peaks > inst.mem_cap * (1 + 1e-6) + 1e-6)[0]
+        if not len(over):
+            return sol
+        m = int(over[0])
+        _, _, _, crit = heads_tails(inst, sol, sched)
+        uses = _block_uses(inst, crit)
+        resident = np.nonzero(sol.mem == m)[0]
+        # least critical last in pop order ⇒ evict from the reversed key
+        order = np.lexsort((resident, inst.data_size[resident], -uses[resident]))
+        d = int(resident[order[-1]])
+        slower = [int(t) for t in level_order
+                  if inst.mem_level[t] > inst.mem_level[m] and inst.data_mem_ok[d, t]]
+        if not slower:
+            raise InfeasibleInstanceError(
+                f"tier {m} overflows and block {d} has no slower compatible "
+                "tier to evict to",
+                block=d, task=int(inst.producer[d]),
+                tiers_tried=tuple(int(t) for t in level_order
+                                  if inst.data_mem_ok[d, t]))
+        sol.mem[d] = slower[0]
 
 
 # --------------------------------------------------------------------------- #

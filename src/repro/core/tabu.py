@@ -9,7 +9,13 @@ accepted move.  Neighbors are ranked with a cheap *approximate evaluation*
 — the paper's mixed evaluation strategy (§V-F).  Move attributes are tabu for
 θ1 = m + rand()%(2m) (change-core) / θ2 = n + rand()%n (N7) iterations, with
 the standard aspiration criterion (a tabu move is admissible when it improves
-the best known makespan).
+the best known makespan).  The tenure "rand()" is a *counter-based* draw
+(:func:`_tenure_draw`, a 32-bit avalanche over ``(seed, walk, iteration)``)
+rather than a stateful RNG stream: the distribution is the paper's, but the
+draw is a pure function of the trajectory position, so the device-resident
+engine (``core/device_search.py``) reproduces it exactly inside ``jax.jit``
+with uint32 arithmetic — stateful PCG streams cannot cross that boundary.
+The perturbation path still uses the walk's ``numpy`` Generator stream.
 
 Two search drivers share these semantics:
 
@@ -62,6 +68,30 @@ __all__ = [
 _WINDOW = APPROX_WINDOW  # approximate-evaluation look-ahead window (ops)
 
 
+def _mix32(*words: int) -> int:
+    """Deterministic 32-bit avalanche over integer words (murmur3-style
+    finalizer rounds).  Pure Python ints ⇒ portable; the device engine
+    replays it bit-for-bit with uint32 lax ops."""
+    h = 0x811C9DC5
+    for w in words:
+        h ^= int(w) & 0xFFFFFFFF
+        h = (h * 0x9E3779B1) & 0xFFFFFFFF
+        h ^= h >> 16
+        h = (h * 0x85EBCA6B) & 0xFFFFFFFF
+        h ^= h >> 13
+    return h
+
+
+def _tenure_draw(seed: int, walk: int, it: int, is_cc: bool,
+                 n_procs: int, n_tasks: int) -> int:
+    """Tabu tenure θ1/θ2: paper distribution, counter-based draw keyed on the
+    trajectory position (one accepted move per walk per iteration)."""
+    h = _mix32(seed, walk, it, 1 if is_cc else 0)
+    if is_cc:
+        return n_procs + h % (2 * n_procs)           # θ1 = m + rand() % 2m
+    return n_tasks + h % max(1, n_tasks)             # θ2 = n + rand() % n
+
+
 @dataclasses.dataclass
 class TSParams:
     max_unimproved: int = 400          # λ
@@ -96,6 +126,10 @@ class TSResult:
     n_exact_evals: int = 0
     n_approx_evals: int = 0
     stop_reason: str = "converged"
+    # rounds that entered the random-perturbation branch (Alg. 2 line 11);
+    # the device engine's bit-for-bit parity contract only covers runs where
+    # this stays 0, so benches scope their strict assertions on it
+    n_perturbations: int = 0
 
 
 @dataclasses.dataclass
@@ -472,6 +506,7 @@ def tabu_search(
     it = 0
     unimproved = 0
     n_exact = n_approx = 0
+    n_perturbations = 0
     accepted = 0
     stop_reason = "converged"
 
@@ -578,6 +613,7 @@ def tabu_search(
             # all admissible moves tabu/cyclic → random perturbation (line 11)
             cur, sched, n_pert = _perturb(inst, cur, sched, crit, rng, params)
             n_exact += n_pert
+            n_perturbations += 1
             unimproved += 1
             if _fire(on_iteration, False, sched.makespan):
                 stop_reason = "callback"
@@ -588,10 +624,7 @@ def tabu_search(
         # tabu the configuration we are destroying (so we don't undo the move)
         mpred_before, _ = cur.machine_pred_succ(n_tasks)
         destroyed = (m.task, m.src_proc, int(mpred_before[m.task]) if mpred_before[m.task] >= 0 else -2)
-        if m.kind == "cc":
-            tenure = n_procs + int(rng.integers(0, 2 * n_procs))       # θ1
-        else:
-            tenure = n_tasks + int(rng.integers(0, max(1, n_tasks)))   # θ2
+        tenure = _tenure_draw(params.seed, 0, it, m.kind == "cc", n_procs, n_tasks)
         tabu[destroyed] = it + tenure
 
         cur = cand
@@ -724,6 +757,7 @@ def tabu_multiwalk(
     active = np.ones(w_count, dtype=bool)
     it = 0
     n_exact = n_approx = 0
+    n_perturbations = 0
     stop_reason = "converged"
 
     def _fire(cb, improved: bool, current: float) -> bool:
@@ -881,6 +915,7 @@ def tabu_multiwalk(
                 sol_w, sched_w, n_pert = _perturb(inst, sol_w, sched_w, crits[w],
                                                   rngs[w], params)
                 n_exact += n_pert
+                n_perturbations += 1
                 sol_cache[w] = sol_w
                 packed.set_solution(w, sol_w)
                 start[w] = sched_w.start
@@ -892,10 +927,8 @@ def tabu_multiwalk(
             mv = _move_at(wr.mb, wr.chosen_i)
             mp_before = int(packed.mpred[w, mv.task])
             destroyed = (mv.task, mv.src_proc, mp_before if mp_before >= 0 else -2)
-            if mv.kind == "cc":
-                tenure = n_procs + int(rngs[w].integers(0, 2 * n_procs))       # θ1
-            else:
-                tenure = n_tasks + int(rngs[w].integers(0, max(1, n_tasks)))   # θ2
+            tenure = _tenure_draw(params.seed, w, it, mv.kind == "cc",
+                                  n_procs, n_tasks)
             tabu[w][destroyed] = it + tenure
 
             if scalar:
@@ -966,6 +999,7 @@ def tabu_multiwalk(
         n_exact_evals=n_exact,
         n_approx_evals=n_approx,
         stop_reason=stop_reason,
+        n_perturbations=n_perturbations,
         walks=w_count,
         per_walk=per_walk,
     )

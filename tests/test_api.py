@@ -238,28 +238,23 @@ def test_portfolio_respects_time_budget():
 
 
 # --------------------------------------------------------------------------- #
-# deprecation shims                                                            #
+# legacy names live in their submodules only (PR-1 shims removed)              #
 # --------------------------------------------------------------------------- #
-def test_legacy_entry_points_warn_and_agree():
+def test_legacy_entry_points_removed_from_package_root():
+    import types
+
     import repro.core as core
 
-    inst = small_instance(13)
-    with pytest.warns(DeprecationWarning, match="repro.solve"):
-        sol = core.construct_greedy(inst, "slack_first", rng=1)
-    assert np.isclose(exact_schedule(inst, sol).makespan,
-                      solve(inst, "greedy:slack_first", seed=1).makespan)
-    with pytest.warns(DeprecationWarning, match="repro.solve"):
-        lb = core.load_balance(inst)
-    assert np.isclose(exact_schedule(inst, lb).makespan,
-                      solve(inst, "load_balance").makespan)
-    # iteration-bounded so the comparison is deterministic (a binding wall
-    # clock would make the two runs diverge on slow machines)
-    params = TSParams(max_unimproved=10, time_limit=60.0, top_k=4,
-                      max_iters=40, seed=2)
-    with pytest.warns(DeprecationWarning, match="repro.solve"):
-        res = core.tabu_search(inst, construct_greedy(inst, "slack_first", rng=2), params)
-    assert np.isclose(res.best_makespan,
-                      solve(inst, "tabu", params=params, seed=2).makespan)
-    with pytest.warns(DeprecationWarning, match="repro.solve"):
-        mk, _ = core.brute_force_optimum(micro_instance())
-    assert np.isclose(mk, solve(micro_instance(), "ilp_brute_force").makespan)
+    for name in ("construct_greedy", "load_balance", "tabu_search",
+                 "brute_force_optimum"):
+        attr = getattr(core, name, None)
+        # either gone entirely, or (for load_balance) the *submodule* that
+        # happens to share the name — never a callable shim
+        assert attr is None or isinstance(attr, types.ModuleType), \
+            f"shim {name} should be gone"
+        assert name not in core.__all__
+    # the implementations remain importable from their submodules
+    from repro.core.greedy import construct_greedy as _g  # noqa: F401
+    from repro.core.ilp import brute_force_optimum as _b  # noqa: F401
+    from repro.core.load_balance import load_balance as _l  # noqa: F401
+    from repro.core.tabu import tabu_search as _t  # noqa: F401

@@ -1,0 +1,196 @@
+"""Device-resident multiwalk engine: W=1 bit-for-bit trajectory parity with
+the legacy drivers, vmapped-batch identity with per-instance runs, budget
+semantics, and the solver registration."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import (  # noqa: E402
+    Budget,
+    TSParams,
+    list_solvers,
+    random_instance,
+    solve,
+)
+from repro.core.device_search import (  # noqa: E402
+    MEM_UPDATE_DISABLED,
+    DeviceConfig,
+    device_multiwalk,
+    launch_cache_info,
+    solve_instances,
+)
+from repro.core.greedy import STRATEGIES, construct_greedy  # noqa: E402
+from repro.core.solution import exact_schedule  # noqa: E402
+from repro.core.tabu import tabu_multiwalk, tabu_search  # noqa: E402
+
+# one parameterization shared across parity tests so every case reuses the
+# same compiled launch (the bucket key ignores the instance seed)
+PARITY = dict(max_unimproved=15, time_limit=1e9, top_k=5, max_iters=40,
+              mem_update_period=MEM_UPDATE_DISABLED)
+CFG = DeviceConfig(sync_every=16, crit_cap=32)
+
+
+def small_instance(seed=0, **kw):
+    kw.setdefault("n_tasks", 40)
+    kw.setdefault("n_data", 100)
+    return random_instance(seed, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# W=1 trajectory parity (mirrors tests/test_tabu_multiwalk.py)                 #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 4])
+def test_w1_reproduces_legacy_trajectory(seed):
+    """The acceptance contract: W=1 device == legacy tabu_search, bit for
+    bit (history, incumbent, iteration/eval counts, final solution), in the
+    no-inner-Alg-3 / no-perturbation regime the engine's parity covers."""
+    inst = small_instance(seed)
+    params = TSParams(seed=3, **PARITY)
+    legacy = tabu_search(inst, construct_greedy(inst, "slack_first", rng=3), params)
+    dev = device_multiwalk(inst, [construct_greedy(inst, "slack_first", rng=3)],
+                           params, config=CFG)
+    assert dev.history == legacy.history
+    assert dev.best_makespan == legacy.best_makespan
+    assert dev.iterations == legacy.iterations
+    assert dev.n_exact_evals == legacy.n_exact_evals
+    assert dev.n_approx_evals == legacy.n_approx_evals
+    assert dev.stop_reason == legacy.stop_reason
+    assert np.array_equal(dev.best.assign, legacy.best.assign)
+    assert np.array_equal(dev.best.mem, legacy.best.mem)
+    assert dev.best.proc_seq == legacy.best.proc_seq
+
+
+@pytest.mark.slow  # extra launch compiles; covered in the CI slow lane
+def test_multiwalk_parity_w3(seed=2):
+    inst = small_instance(seed, n_tasks=45, n_data=110)
+    params = TSParams(seed=7, **PARITY)
+    inits = [construct_greedy(inst, STRATEGIES[w % 4], rng=7 + w)
+             for w in range(3)]
+    mw = tabu_multiwalk(inst, [s.copy() for s in inits], params)
+    dv = device_multiwalk(inst, [s.copy() for s in inits], params, config=CFG)
+    assert dv.history == mw.history
+    assert dv.iterations == mw.iterations
+    assert dv.n_exact_evals == mw.n_exact_evals
+    for a, b in zip(mw.per_walk, dv.per_walk):
+        assert a.history == b.history
+        assert a.best_makespan == b.best_makespan
+
+
+# --------------------------------------------------------------------------- #
+# vmapped instance batch == per-instance runs                                  #
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow  # extra launch compiles; covered in the CI slow lane
+def test_solve_instances_matches_per_instance_runs():
+    insts = [small_instance(s, n_tasks=40 + 2 * s) for s in range(3)]
+    params = TSParams(seed=1, **PARITY)
+    all_inits = [[construct_greedy(i, STRATEGIES[w % 4], rng=1 + w)
+                  for w in range(2)] for i in insts]
+    batch = solve_instances(insts, [[s.copy() for s in il] for il in all_inits],
+                            params, config=CFG)
+    for i, inst in enumerate(insts):
+        solo = device_multiwalk(inst, [s.copy() for s in all_inits[i]],
+                                params, config=CFG)
+        assert batch[i].history == solo.history
+        assert batch[i].best_makespan == solo.best_makespan
+        assert batch[i].iterations == solo.iterations
+        assert batch[i].n_exact_evals == solo.n_exact_evals
+        sched = exact_schedule(inst, batch[i].best)
+        assert sched is not None
+        assert np.isclose(sched.makespan, batch[i].best_makespan, rtol=1e-12)
+
+
+# --------------------------------------------------------------------------- #
+# budgets, overflow escalation, solver registration                            #
+# --------------------------------------------------------------------------- #
+def test_device_respects_eval_budget():
+    inst = small_instance(9)
+    params = TSParams(max_unimproved=10**9, time_limit=1e9, top_k=5, seed=0,
+                      max_evals=60, mem_update_period=MEM_UPDATE_DISABLED)
+    init = construct_greedy(inst, "slack_first", rng=0)
+    mw = tabu_multiwalk(inst, [init.copy()], params)
+    dv = device_multiwalk(inst, [init.copy()], params,
+                          config=DeviceConfig(sync_every=16, crit_cap=32))
+    assert dv.stop_reason == "max_evals"
+    assert dv.n_exact_evals == mw.n_exact_evals
+    assert dv.history == mw.history
+
+
+@pytest.mark.slow  # extra launch compiles; covered in the CI slow lane
+def test_crit_cap_overflow_escalates_and_still_matches():
+    """A deliberately tiny crit_cap forces the overflow→relaunch path; the
+    trajectory must be unchanged (the overflowing round is never committed)."""
+    inst = small_instance(0)
+    params = TSParams(seed=3, **PARITY)
+    init = construct_greedy(inst, "slack_first", rng=3)
+    ref = device_multiwalk(inst, [init.copy()], params, config=CFG)
+    tiny = device_multiwalk(inst, [init.copy()], params,
+                            config=DeviceConfig(sync_every=16, crit_cap=4))
+    assert tiny.history == ref.history
+    assert tiny.best_makespan == ref.best_makespan
+    assert tiny.n_exact_evals == ref.n_exact_evals
+
+
+def test_registered_solver_and_backend_routing():
+    assert "tabu_device" in list_solvers()
+    inst = small_instance(7)
+    params = TSParams(max_unimproved=8, time_limit=30.0, top_k=4, max_iters=15)
+    rep = solve(inst, "tabu_device", walks=2, params=params, seed=0,
+                device={"sync_every": 16, "crit_cap": 32})
+    assert rep.method == "tabu_device"
+    assert rep.extras["backend"] == "device"
+    assert rep.extras["walks"] == 2
+    assert "compile_seconds" in rep.extras
+    assert rep.feasible
+    sched = exact_schedule(inst, rep.solution)
+    assert np.isclose(sched.makespan, rep.makespan, rtol=1e-9)
+    # the same engine through the multiwalk solver's backend switch
+    rep2 = solve(inst, "tabu_multiwalk", walks=2, params=params, seed=0,
+                 backend="device", device={"sync_every": 16, "crit_cap": 32})
+    assert rep2.makespan == rep.makespan
+    assert rep2.history == rep.history
+
+
+@pytest.mark.slow  # extra launch compiles; covered in the CI slow lane
+def test_device_mem_updates_at_sync_keep_solution_consistent():
+    """Default params (Alg-3 enabled) run memory_update at sync boundaries;
+    the returned incumbent must be schedulable and capacity-feasible."""
+    inst = small_instance(11)
+    params = TSParams(max_unimproved=12, time_limit=30.0, top_k=4,
+                      max_iters=24, seed=2)
+    init = construct_greedy(inst, "slack_first", rng=2)
+    res = device_multiwalk(inst, [init], params,
+                           config=DeviceConfig(sync_every=8, crit_cap=32))
+    sched = exact_schedule(inst, res.best)
+    assert sched is not None
+    assert np.isclose(sched.makespan, res.best_makespan, rtol=1e-9)
+    assert res.iterations >= 1
+
+
+def test_launch_cache_hit_uses_each_instances_own_arrays():
+    """Regression: two DIFFERENT instances sharing every shape bucket must
+    not cross-contaminate through the launch LRU (instance arrays are call
+    arguments, never baked-in jit constants)."""
+    params = TSParams(seed=3, **PARITY)
+    results = {}
+    for seed in (0, 4):  # same n_tasks/n_data → same bucket key
+        inst = small_instance(seed)
+        init = construct_greedy(inst, "slack_first", rng=3)
+        legacy = tabu_search(inst, init.copy(), params)
+        dev = device_multiwalk(inst, [init.copy()], params, config=CFG)
+        assert dev.history == legacy.history, f"seed {seed} (cache collision?)"
+        results[seed] = dev.best_makespan
+    assert results[0] != results[4]  # genuinely different instances
+
+
+def test_launch_cache_reuse_across_same_bucket_runs():
+    info0 = launch_cache_info()
+    inst = small_instance(0)
+    params = TSParams(seed=5, **PARITY)
+    init = construct_greedy(inst, "slack_first", rng=5)
+    device_multiwalk(inst, [init.copy()], params, config=CFG)
+    misses_after_first = launch_cache_info()["misses"]
+    device_multiwalk(inst, [init.copy()], params, config=CFG)
+    info2 = launch_cache_info()
+    assert info2["misses"] == misses_after_first  # second run: cache hit
+    assert info2["hits"] > info0["hits"]
