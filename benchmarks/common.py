@@ -9,6 +9,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import shutil
 import subprocess
 import time
 
@@ -16,7 +17,8 @@ import numpy as np
 
 from repro.core import TSParams, random_instance
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+RESULTS_DIR = os.path.join(REPO_ROOT, "results", "bench")
 HISTORY_PATH = os.path.join(RESULTS_DIR, "history.jsonl")
 
 
@@ -84,6 +86,10 @@ def save_json(name: str, payload) -> str:
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
+    if name.startswith("BENCH"):
+        # canonical copy at the repo root: the perf-trajectory tracker scans
+        # there, not under results/bench/
+        shutil.copyfile(path, os.path.join(REPO_ROOT, f"{name}.json"))
     return path
 
 

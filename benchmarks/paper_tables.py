@@ -46,20 +46,15 @@ def table3_init_strategies(sc: Scale) -> dict:
 def _device_row_makespans(instances, sc: Scale, walks: int) -> list[float]:
     """One vmapped device-engine launch per sync for a whole table row.
 
-    Inits replay the ``tabu_multiwalk`` solver's construction exactly
-    (walk 0 = slack_first at the params seed, walks 1..W-1 cycle the §V-B
-    strategies at seed+w), so backend="device" rows differ from the numpy
-    rows only by the engine, never by the starting solutions."""
+    Inits come from the ``tabu_multiwalk`` solver's own construction
+    (``repro.core.api.multiwalk_inits``), so backend="device" rows differ
+    from the numpy rows only by the engine, never by the starting
+    solutions."""
     from repro.core import solve_instances
-    from repro.core.greedy import STRATEGIES, construct_greedy
+    from repro.core.api import multiwalk_inits
 
     seed = sc.ts.seed
-    inits = [
-        [construct_greedy(inst, "slack_first", rng=seed)]
-        + [construct_greedy(inst, STRATEGIES[w % len(STRATEGIES)],
-                            rng=seed + w) for w in range(1, walks)]
-        for inst in instances
-    ]
+    inits = [multiwalk_inits(inst, walks, seed)[0] for inst in instances]
     results = solve_instances(instances, inits, sc.ts)
     return [r.best_makespan for r in results]
 

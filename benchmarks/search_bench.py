@@ -9,6 +9,13 @@ Lanes (``--backend``):
   ≥3× iteration throughput, and ``walks=8`` ≤ the single walk under an
   equal ``max_evals`` budget.  ``--smoke`` asserts the W=1 trajectory is
   *identical* to the legacy driver.
+* ``suite`` — the PR-5 workload-suite lane: whole registered suites
+  (``repro.instances``) swept on the numpy and device backends.  Each
+  shape-bucket group runs through one vmapped ``solve_instances`` launch;
+  the launch-cache counters must show at most one compile per bucket, and
+  every row is normalized by the family-independent lower bound so quality
+  is comparable across families.  Writes ``BENCH_suite.json`` and a
+  ``search_bench_suite`` gate record to ``history.jsonl``.
 * ``device`` — the PR-4 device engine lane.  Asserts the W=1 device
   trajectory is **bit-for-bit identical** to the legacy ``tabu_search``
   history (the parity gate), then measures steady-state walk-iteration
@@ -139,6 +146,64 @@ def numpy_lane(inst, args, n_tasks, n_data, iters, eq_evals, eq_unimproved):
 
 
 # --------------------------------------------------------------------------- #
+# suite lane (PR-5 gates): whole workload suites through the sweep driver      #
+# --------------------------------------------------------------------------- #
+def suite_lane(args):
+    """Sweep registered suites on the numpy and device backends.
+
+    The device half runs every shape-bucket group through one vmapped
+    ``solve_instances`` launch; the launch-cache counters must show at most
+    one compile per bucket (the "compile once per bucket" gate).  Rows are
+    normalized by the family-independent lower bounds so TS-vs-LB quality
+    is comparable across families.
+    """
+    from repro.core import Budget
+    from repro.instances import sweep
+
+    if args.smoke:
+        suites = ["smoke"]
+        budget = Budget(max_iters=6, time_limit=60.0)
+        walks = 2
+    else:
+        suites = ["table2", "trees_small", "fft_wide", "stencil_small"]
+        budget = Budget(max_iters=40, time_limit=120.0)
+        walks = 4
+
+    payload = {"suites": {}}
+    for name in suites:
+        t0 = time.monotonic()
+        rep_np = sweep(name, solver="tabu_multiwalk", backend="numpy",
+                       budget=budget, walks=walks, seed=args.seed)
+        rep_dev = sweep(name, backend="device", budget=budget, walks=walks,
+                        seed=args.seed, device={"sync_every": 8})
+        compiles_ok = rep_dev.compiles <= rep_dev.buckets
+        payload["suites"][name] = {
+            "numpy": {"families": rep_np.families,
+                      "wall": rep_np.wall_time,
+                      "rows": rep_np.rows},
+            "device": {"families": rep_dev.families,
+                       "wall": rep_dev.wall_time,
+                       "buckets": rep_dev.buckets,
+                       "compiles": rep_dev.compiles,
+                       "compiles_per_bucket_ok": compiles_ok,
+                       "launch_cache": rep_dev.launch_cache,
+                       "rows": rep_dev.rows},
+            "seconds": time.monotonic() - t0,
+        }
+        mean_ratio = sum(f["mean_ratio"] for f in rep_dev.families.values()) \
+            / max(1, len(rep_dev.families))
+        emit(f"suite_{name}", 0.0,
+             f"{len(rep_dev.rows)} instances, {rep_dev.buckets} buckets, "
+             f"{rep_dev.compiles} compiles, mean mk/LB {mean_ratio:.2f}")
+        if not compiles_ok:
+            raise SystemExit(
+                f"suite {name}: {rep_dev.compiles} device compiles for "
+                f"{rep_dev.buckets} buckets — the sweep must compile at most "
+                "once per shape bucket")
+    return payload
+
+
+# --------------------------------------------------------------------------- #
 # device lane (PR-4 gates)                                                     #
 # --------------------------------------------------------------------------- #
 def device_lane(args, n_tasks, n_data, iters):
@@ -257,8 +322,8 @@ def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized instance; asserts trajectory parity")
-    ap.add_argument("--backend", choices=("numpy", "device"), default="numpy",
-                    help="which engine lane to run")
+    ap.add_argument("--backend", choices=("numpy", "device", "suite"),
+                    default="numpy", help="which engine lane to run")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -270,6 +335,23 @@ def main(argv=None) -> dict:
     payload = {"scale": {"n_tasks": n_tasks, "n_data": n_data,
                          "smoke": args.smoke},
                "backend": args.backend}
+
+    if args.backend == "suite":
+        payload["suite_lane"] = suite_lane(args)
+        path = save_json("BENCH_suite", payload)
+        gates = {}
+        for name, lane in payload["suite_lane"]["suites"].items():
+            gates[f"{name}_compiles"] = lane["device"]["compiles"]
+            gates[f"{name}_buckets"] = lane["device"]["buckets"]
+            gates[f"{name}_compiles_per_bucket_ok"] = \
+                lane["device"]["compiles_per_bucket_ok"]
+            ratios = [f["mean_ratio"]
+                      for f in lane["device"]["families"].values()]
+            gates[f"{name}_mean_ratio"] = sum(ratios) / max(1, len(ratios))
+        append_history("search_bench_suite", gates, scale=payload["scale"])
+        print(f"wrote {path}  (suite sweep: "
+              + ", ".join(payload["suite_lane"]["suites"]) + ")")
+        return payload
 
     if args.backend == "device":
         payload["device_lane"] = device_lane(args, n_tasks, n_data, iters)

@@ -44,6 +44,7 @@ __all__ = [
     "register_solver",
     "get_solver",
     "list_solvers",
+    "multiwalk_inits",
 ]
 
 
@@ -288,6 +289,30 @@ def _resolve_init(inst: Instance, init: Union[Solution, str, None], seed: int) -
     return construct_greedy(inst, strategy, rng=seed)
 
 
+def multiwalk_inits(
+    inst: Instance,
+    walks: int,
+    seed: int,
+    init: Union[Solution, str, None] = None,
+) -> tuple[list[Solution], list[str]]:
+    """Walk-start construction shared by the ``tabu_multiwalk`` solver, the
+    suite sweep driver (``repro.instances.suites``), and the device-row
+    benchmarks: walk 0 resolves ``init`` (default ``slack_first``) at
+    ``seed``; walks 1..W-1 cycle the §V-B strategies at per-walk seeds.
+    Keeping this in one place is what makes "device rows differ from numpy
+    rows only by the engine" a structural guarantee, not a convention."""
+    if walks < 1:
+        raise ValueError("walks must be >= 1")
+    init_sols = [_resolve_init(inst, init, seed)]
+    labels = [init if isinstance(init, str)
+              else ("explicit" if isinstance(init, Solution) else "slack_first")]
+    for w in range(1, walks):
+        strategy = STRATEGIES[w % len(STRATEGIES)]
+        init_sols.append(construct_greedy(inst, strategy, rng=seed + w))
+        labels.append(f"{strategy}@{seed + w}")
+    return init_sols, labels
+
+
 def _budgeted_ts_params(params: TSParams, budget: Budget, seed: int) -> TSParams:
     over: dict = {"seed": seed}
     if budget.time_limit is not None:
@@ -389,15 +414,7 @@ def _solve_tabu_multiwalk(
         init_sols = list(inits)
         labels = [f"explicit{i}" for i in range(len(init_sols))]
     else:
-        if walks < 1:
-            raise ValueError("walks must be >= 1")
-        init_sols = [_resolve_init(inst, init, seed)]
-        labels = [init if isinstance(init, str)
-                  else ("explicit" if isinstance(init, Solution) else "slack_first")]
-        for w in range(1, walks):
-            strategy = STRATEGIES[w % len(STRATEGIES)]
-            init_sols.append(construct_greedy(inst, strategy, rng=seed + w))
-            labels.append(f"{strategy}@{seed + w}")
+        init_sols, labels = multiwalk_inits(inst, walks, seed, init)
     ts = _budgeted_ts_params(params, budget, seed)
     if ts.backend == "device":
         from .device_search import DeviceConfig, device_multiwalk

@@ -98,93 +98,16 @@ def launch_cache_info() -> dict:
 
 
 # --------------------------------------------------------------------------- #
-# instance packing                                                             #
+# instance packing — lives in repro.instances.batch (PR 5); re-exported here   #
+# because the packed form was born in this module and tests/benchmarks         #
+# imported it from here                                                        #
 # --------------------------------------------------------------------------- #
-@dataclasses.dataclass(frozen=True)
-class InstancePack:
-    """Bucket-padded array form of one instance (host numpy)."""
-
-    n: int            # real task count
-    p: int            # real proc count
-    d: int            # real data count
-    n_b: int
-    p_b: int
-    s_b: int          # seq capacity = n_b + 1
-    d_b: int
-    pred_mat: np.ndarray    # (n_b, Dp) int32, -1 pad
-    succ_mat: np.ndarray    # (n_b, Ds) int32
-    in_blk: np.ndarray      # (n_b, Din) int32, -1 pad (CSR order per task)
-    out_blk: np.ndarray     # (n_b, Dout) int32
-    in_idx: np.ndarray      # (E_in,) int32 padded, with valid mask
-    in_owner: np.ndarray    # (E_in,) int32
-    in_valid: np.ndarray    # (E_in,) bool
-    in_ptr: np.ndarray      # (n_b + 1,) int32 (pad tasks repeat the end)
-    out_idx: np.ndarray
-    out_owner: np.ndarray
-    out_valid: np.ndarray
-    out_ptr: np.ndarray
-    proc_time: np.ndarray   # (n_b, p_b) f64; pad tasks 0.0, pad procs +inf
-    access_time: np.ndarray  # (p_b, n_mems) f64 (pad procs repeat row 0)
-    data_size: np.ndarray   # (d_b,) f64 (pads 0)
-    compat: np.ndarray      # (n_b, p_b) bool
-
-
-def _pad_csr(n: int, n_b: int, indptr, idx, e_b: int, quantum: int = 128):
-    e = len(idx)
-    e_b = max(e_b, quantum * ((e + quantum - 1) // quantum), quantum)
-    out_idx = np.zeros(e_b, dtype=_I32)
-    out_idx[:e] = idx
-    owner = np.zeros(e_b, dtype=_I32)
-    owner[:e] = np.repeat(np.arange(n), np.diff(indptr))
-    valid = np.zeros(e_b, dtype=bool)
-    valid[:e] = True
-    ptr = np.full(n_b + 1, indptr[-1], dtype=_I32)
-    ptr[: n + 1] = indptr
-    return out_idx, owner, valid, ptr, e_b
-
-
-def _dense_blocks(n: int, n_b: int, indptr, idx, width: int) -> np.ndarray:
-    from ..kernels.schedule_dp import dense_from_csr
-
-    return dense_from_csr(n, n_b, indptr, idx, min_width=width)
-
-
-def pack_instance(inst: Instance, *, n_b: int | None = None,
-                  p_b: int | None = None, d_b: int | None = None,
-                  widths: tuple[int, int, int, int] = (1, 1, 1, 1),
-                  e_b: tuple[int, int] = (0, 0)) -> InstancePack:
-    from ..kernels import schedule_dp as sdp
-
-    n, p, d = inst.n_tasks, inst.n_procs, inst.n_data
-    n_b = n_b or sdp.bucket(n)
-    p_b = p_b or p
-    d_b = d_b or sdp.bucket(d)
-    graph = sdp.dense_graph(inst, n_bucket=n_b)
-    in_idx, in_owner, in_valid, in_ptr, _ = _pad_csr(
-        n, n_b, inst.in_indptr, inst.in_idx, e_b[0])
-    out_idx, out_owner, out_valid, out_ptr, _ = _pad_csr(
-        n, n_b, inst.out_indptr, inst.out_idx, e_b[1])
-    pt = np.full((n_b, p_b), np.inf)
-    pt[:n, :p] = inst.proc_time
-    pt[n:, :] = 0.0  # pad tasks: zero duration everywhere
-    at = np.zeros((p_b, inst.n_mems))
-    at[:p] = inst.access_time
-    at[p:] = inst.access_time[0]
-    ds = np.zeros(d_b)
-    ds[:d] = inst.data_size
-    compat = np.zeros((n_b, p_b), dtype=bool)
-    compat[:n, :p] = np.isfinite(inst.proc_time)
-    return InstancePack(
-        n=n, p=p, d=d, n_b=n_b, p_b=p_b, s_b=n_b + 1, d_b=d_b,
-        pred_mat=_dense_blocks(n, n_b, inst.pred_indptr, inst.pred_idx, widths[0]),
-        succ_mat=_dense_blocks(n, n_b, inst.succ_indptr, inst.succ_idx, widths[1]),
-        in_blk=_dense_blocks(n, n_b, inst.in_indptr, inst.in_idx, widths[2]),
-        out_blk=_dense_blocks(n, n_b, inst.out_indptr, inst.out_idx, widths[3]),
-        in_idx=in_idx, in_owner=in_owner, in_valid=in_valid, in_ptr=in_ptr,
-        out_idx=out_idx, out_owner=out_owner, out_valid=out_valid,
-        out_ptr=out_ptr, proc_time=pt, access_time=at, data_size=ds,
-        compat=compat,
-    )
+from ..instances.batch import (  # noqa: E402
+    InstanceBatch,
+    InstancePack,
+    ia_from_pack,
+    pack_instance,
+)
 
 
 # --------------------------------------------------------------------------- #
@@ -289,18 +212,6 @@ def _mix32_jnp(jnp, *words):
         h = h * jnp.uint32(0x85EBCA6B)
         h = h ^ (h >> 13)
     return h
-
-
-def ia_from_pack(ip: InstancePack) -> dict:
-    """Instance arrays as a launch-argument pytree (vmappable over a stacked
-    leading axis for the batch sweep).  ``n``/``p`` ride along as scalars so
-    per-instance real sizes survive shared-bucket padding."""
-    out = {f.name: np.asarray(getattr(ip, f.name))
-           for f in dataclasses.fields(InstancePack)
-           if f.name not in ("n", "p", "d", "n_b", "p_b", "s_b", "d_b")}
-    out["n"] = np.int64(ip.n)
-    out["p"] = np.int64(ip.p)
-    return out
 
 
 def _round_loop(ia: dict, w_count: int, params: TSParams,
@@ -1246,7 +1157,7 @@ def _write_walk(ip: InstancePack, state: dict, w: int, sol: Solution,
 # instance-vmapped sweeps                                                      #
 # --------------------------------------------------------------------------- #
 def solve_instances(
-    instances: list[Instance],
+    instances: "list[Instance] | InstanceBatch",
     inits: list[list[Solution]],
     params: TSParams | None = None,
     *,
@@ -1255,22 +1166,26 @@ def solve_instances(
     """Run the device engine over a batch of same-bucket instances in one
     vmapped compiled call per sync — an entire Table-II row per launch.
 
-    All instances are padded to shared shape buckets and their real sizes
-    ride along as traced scalars; every loop update is masked, and JAX's
-    ``while_loop`` batching keeps finished instances' state frozen, so
-    per-instance results are identical to per-instance ``device_multiwalk``
-    calls with the same ``crit_cap`` (asserted by
-    ``tests/test_device_search.py``).  Budgets apply per instance; wall time
-    is checked between launches.  Algorithm 3 runs host-side at sync
-    boundaries exactly like the single-instance driver.
+    ``instances`` may be a plain list (converted here) or a prebuilt
+    :class:`~repro.instances.InstanceBatch` — the packed/bucketed boundary
+    object the suite sweep constructs once per bucket group.  All instances
+    are padded to shared shape buckets and their real sizes ride along as
+    traced scalars; every loop update is masked, and JAX's ``while_loop``
+    batching keeps finished instances' state frozen, so per-instance
+    results are identical to per-instance ``device_multiwalk`` calls with
+    the same ``crit_cap`` (asserted by ``tests/test_device_search.py``).
+    Budgets apply per instance; wall time is checked between launches.
+    Algorithm 3 runs host-side at sync boundaries exactly like the
+    single-instance driver.
     """
     import jax
     from jax.experimental import enable_x64
 
-    from ..kernels import schedule_dp as sdp
-
     params = params or TSParams()
     cfg = config or DeviceConfig()
+    batch = instances if isinstance(instances, InstanceBatch) \
+        else InstanceBatch.from_instances(instances)
+    instances = list(batch.instances)
     n_inst = len(instances)
     assert n_inst >= 1 and len(inits) == n_inst
     w_count = len(inits[0])
@@ -1287,17 +1202,10 @@ def solve_instances(
         cur_sols.append(sols)
         scheds.append(sc)
 
-    # shared buckets: every padded axis is the max bucket across the batch
-    n_b = max(sdp.bucket(i.n_tasks) for i in instances)
-    p_b = max(i.n_procs for i in instances)
-    d_b = max(sdp.bucket(i.n_data) for i in instances)
-    base = [pack_instance(i, n_b=n_b, p_b=p_b, d_b=d_b) for i in instances]
-    widths = tuple(max(getattr(ip2, f).shape[1] for ip2 in base)
-                   for f in ("pred_mat", "succ_mat", "in_blk", "out_blk"))
-    e_b = (max(len(ip2.in_idx) for ip2 in base),
-           max(len(ip2.out_idx) for ip2 in base))
-    packs = [pack_instance(i, n_b=n_b, p_b=p_b, d_b=d_b, widths=widths,
-                           e_b=e_b) for i in instances]
+    # shared buckets live on the batch: every padded axis is the max bucket
+    # across the batch, computed once at InstanceBatch construction
+    n_b = batch.n_b
+    packs = list(batch.packs)
     crit_cap = cfg.crit_cap or max(
         _auto_crit_cap(i, s, sc)
         for i, s, sc in zip(instances, cur_sols, scheds))
@@ -1315,8 +1223,7 @@ def solve_instances(
     compile_s = 0.0
 
     state = {k: np.stack([st[k] for st in states]) for k in states[0]}
-    ia = {k: np.stack([ia_from_pack(ip2)[k] for ip2 in packs])
-          for k in ia_from_pack(packs[0])}
+    ia = batch.arrays()
 
     with enable_x64():
         import jax.numpy as jnp

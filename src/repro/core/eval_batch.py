@@ -370,7 +370,13 @@ class BatchEvaluator:
     """
 
     def __init__(self, inst: Instance, backend: str = "numpy",
-                 jax_impl: str | None = None, cache_size: int = 16):
+                 jax_impl: str | None = None, cache_size: int = 16,
+                 pack=None):
+        """``pack`` (an ``repro.instances.InstancePack``) lets the caller
+        hand over the already-padded dense graph — the ``repro.instances``
+        boundary — instead of this evaluator re-deriving its own.  Only the
+        ``"jax"`` backend's sweeps use a padded graph; the numpy/scalar
+        paths work on the raw CSR and ignore it."""
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         if backend == "jax" and not _jax_available():
@@ -394,6 +400,7 @@ class BatchEvaluator:
         self._in_owner = np.repeat(np.arange(n), np.diff(inst.in_indptr))
         self._out_owner = np.repeat(np.arange(n), np.diff(inst.out_indptr))
         self._jax_fns = LRUCache(maxsize=cache_size)
+        self._pack = pack
         self._graph = None  # lazy schedule_dp.DenseGraph
 
     def cache_info(self) -> dict:
@@ -836,7 +843,9 @@ def _jax_sweeps(engine: BatchEvaluator, packed: PackedSolutions, dur: np.ndarray
     kp = 1 << max(0, (k - 1).bit_length())  # next pow2 ≥ k
     fdtype = jnp.zeros(0).dtype  # float32 unless jax_enable_x64
     if engine._graph is None:
-        engine._graph = sdp.dense_graph(engine.inst)
+        engine._graph = (sdp.graph_from_pack(engine.inst, engine._pack)
+                         if engine._pack is not None
+                         else sdp.dense_graph(engine.inst))
     graph = engine._graph
     n_b = graph.n_b
 

@@ -109,6 +109,7 @@ class Instance:
 
     # ------------------------------------------------------------------ #
     def __post_init__(self) -> None:
+        self._topo_cache: np.ndarray | None = None
         pairs = [np.asarray(self.task_edges, dtype=np.int64).reshape(-1, 2)]
         # data-induced precedence: producer(d) → each consumer of d
         prod = self.producer
@@ -157,7 +158,15 @@ class Instance:
         return np.nonzero(self.data_mem_ok[d])[0]
 
     def topological_order(self) -> np.ndarray:
-        """Kahn topological order over the task precedence DAG."""
+        """Kahn topological order over the task precedence DAG.
+
+        Computed once and cached (instances are treated as immutable once
+        built; bounds and sweep drivers hit this per instance).  The cached
+        array is returned read-only so an accidental in-place edit fails
+        loudly instead of corrupting every later caller.
+        """
+        if self._topo_cache is not None:
+            return self._topo_cache
         indeg = np.diff(self.pred_indptr).astype(np.int64)
         order = np.empty(self.n_tasks, dtype=np.int64)
         stack = list(np.nonzero(indeg == 0)[0])
@@ -172,6 +181,8 @@ class Instance:
                     stack.append(v)
         if k != self.n_tasks:
             raise ValueError("instance precedence graph is cyclic")
+        order.setflags(write=False)
+        self._topo_cache = order
         return order
 
 
@@ -212,114 +223,30 @@ def random_instance(
     tasks ∈ [200, 300], data blocks ∈ [500, 700], edges ≈ 8 × tasks,
     2 high-speed + 8 general cores, T_in : T_proc : T_out ≈ 7 : 15 : 5,
     fast : slow access-time 1 : 1.2, data sizes ∈ [1, 15000], slow tier ∞.
+
+    Delegates to the registered ``random_layered`` family
+    (``repro.instances.generators``), whose DAG wiring is pure array ops.
+    The distribution is unchanged but the RNG draw *order* is not, so
+    instances for a given seed differ from the pre-PR-5 per-datum loop
+    version (see CHANGES.md).
     """
-    rng = np.random.default_rng(rng)
-    if n_tasks is None:
-        n_tasks = int(rng.integers(200, 301))
-    if n_data is None:
-        n_data = int(rng.integers(500, 701))
-    n_procs = n_fast_cores + n_slow_cores
+    from ..instances.generators import random_layered
 
-    # --- DAG over a random topological order --------------------------------
-    # Data blocks carry most dependencies; direct task→task edges add the rest.
-    target_edges = int(edges_per_task * n_tasks)
-    producer = np.full(n_data, -1, dtype=np.int64)
-    cons_pairs: list[tuple[int, int]] = []   # (data, consumer-task)
-    out_pairs: list[tuple[int, int]] = []    # (task, data)
-    n_initial = max(1, n_data // 20)         # ~5% initial inputs (D present at t=0)
-    for d in range(n_data):
-        if d < n_initial:
-            prod = -1
-        else:
-            prod = int(rng.integers(0, max(1, n_tasks - 1)))
-            producer[d] = prod
-            out_pairs.append((prod, d))
-        lo = 0 if prod < 0 else prod + 1
-        n_cons = int(rng.integers(1, 4))
-        cands = rng.integers(lo, n_tasks, size=n_cons)
-        for c in np.unique(cands):
-            cons_pairs.append((d, int(c)))
-
-    n_data_edges = len(cons_pairs) + len(out_pairs)
-    n_task_edges = max(0, target_edges - n_data_edges)
-    te = []
-    for _ in range(n_task_edges):
-        a = int(rng.integers(0, n_tasks - 1))
-        b = int(rng.integers(a + 1, n_tasks))
-        te.append((a, b))
-    task_edges = np.asarray(te, dtype=np.int64).reshape(-1, 2)
-
-    cons_arr = np.asarray(cons_pairs, dtype=np.int64).reshape(-1, 2)
-    out_arr = np.asarray(out_pairs, dtype=np.int64).reshape(-1, 2)
-    cons_indptr, cons_idx = _csr(n_data, cons_arr)
-    in_indptr, in_idx = _csr(n_tasks, cons_arr[:, ::-1])
-    out_indptr, out_idx = _csr(n_tasks, out_arr)
-
-    # --- data sizes, processing times ---------------------------------------
-    data_size = rng.integers(data_size_range[0], data_size_range[1] + 1, size=n_data).astype(
-        np.float64
-    )
-    tin, tproc, tout = tin_tproc_tout
-    base_proc = rng.uniform(0.5 * tproc, 1.5 * tproc, size=n_tasks)
-    speed = np.concatenate(
-        [
-            np.ones(n_fast_cores),
-            rng.uniform(slow_core_factor[0], slow_core_factor[1], size=n_slow_cores),
-        ]
-    )
-    jitter = rng.uniform(0.9, 1.1, size=(n_tasks, n_procs))
-    proc_time = base_proc[:, None] * speed[None, :] * jitter
-    # some tasks only run on fast (synergistic) cores — heterogeneity constraint
-    restricted = rng.random(n_tasks) < core_restrict_prob
-    proc_time[restricted, n_fast_cores:] = np.inf
-
-    # --- memory tiers ---------------------------------------------------------
-    # tiers: [highType2 (global fast), highType1 (local fast), ...] + slow DDR
-    total_vol = float(data_size.sum())
-    n_mems = n_fast_tiers + 1
-    mem_cap = np.empty(n_mems)
-    frac_each = fast_mem_fraction / max(1, n_fast_tiers)
-    mem_cap[:n_fast_tiers] = frac_each * total_vol
-    mem_cap[-1] = np.inf
-    mem_level = np.arange(n_mems)
-
-    # access time per size-unit: calibrated so that mean t_in ≈ `tin` on the
-    # fast tier given mean #inputs per task and mean block size.
-    mean_inputs = max(1e-9, len(cons_pairs) / n_tasks)
-    mean_size = float(data_size.mean())
-    at_fast = tin / (mean_inputs * mean_size)
-    access_time = np.empty((n_procs, n_mems))
-    access_time[:, :n_fast_tiers] = at_fast
-    access_time[:, -1] = at_fast * access_ratio
-    # NUMA jitter: each core is slightly closer to one fast tier than the other
-    access_time *= rng.uniform(0.95, 1.05, size=access_time.shape)
-    # t_out calibration: outputs are fewer; scale via the tout/tin ratio by
-    # boosting output block access implicitly through the generator ratios.
-    # (move-out uses the same AT; the 7:15:5 ratio emerges from edge counts.)
-
-    data_mem_ok = np.ones((n_data, n_mems), dtype=bool)
-    # a small fraction of blocks are DDR-only (e.g. DMA buffers)
-    ddr_only = rng.random(n_data) < 0.05
-    data_mem_ok[ddr_only, :n_fast_tiers] = False
-
-    inst = Instance(
+    inst = random_layered(
+        np.random.default_rng(rng),
         n_tasks=n_tasks,
         n_data=n_data,
-        task_edges=task_edges,
-        producer=producer,
-        cons_indptr=cons_indptr,
-        cons_idx=cons_idx,
-        in_indptr=in_indptr,
-        in_idx=in_idx,
-        out_indptr=out_indptr,
-        out_idx=out_idx,
-        proc_time=proc_time,
-        data_size=data_size,
-        mem_cap=mem_cap,
-        access_time=access_time,
-        mem_level=mem_level,
-        data_mem_ok=data_mem_ok,
+        edges_per_task=edges_per_task,
+        data_size_range=data_size_range,
         name=name,
+        n_fast_cores=n_fast_cores,
+        n_slow_cores=n_slow_cores,
+        tin_tproc_tout=tin_tproc_tout,
+        access_ratio=access_ratio,
+        fast_mem_fraction=fast_mem_fraction,
+        n_fast_tiers=n_fast_tiers,
+        slow_core_factor=slow_core_factor,
+        core_restrict_prob=core_restrict_prob,
     )
     validate_instance(inst)
     return inst

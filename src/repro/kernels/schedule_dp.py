@@ -45,6 +45,7 @@ import numpy as np
 __all__ = [
     "DenseGraph",
     "dense_graph",
+    "graph_from_pack",
     "sweep",
     "sweep_xla",
     "sweep_pallas",
@@ -93,6 +94,14 @@ def dense_from_csr(n: int, n_b: int, indptr: np.ndarray, idx: np.ndarray,
 _dense_from_csr = dense_from_csr  # backward-compat alias
 
 
+def _adj_mask(n: int, n_b: int, succ_indptr, succ_idx) -> np.ndarray:
+    """``adj[i, j] == (j is DAG-pred of i)`` — the Pallas reduce mask."""
+    adj = np.zeros((n_b, n_b), dtype=bool)
+    src = np.repeat(np.arange(n), np.diff(succ_indptr))
+    adj[succ_idx, src] = True
+    return adj
+
+
 def dense_graph(inst, n_bucket: int | None = None) -> DenseGraph:
     """Build the dense-padded adjacency for ``inst`` (a core.mdfg.Instance)."""
     n = inst.n_tasks
@@ -100,10 +109,18 @@ def dense_graph(inst, n_bucket: int | None = None) -> DenseGraph:
     assert n_b >= n
     pred_mat = _dense_from_csr(n, n_b, inst.pred_indptr, inst.pred_idx)
     succ_mat = _dense_from_csr(n, n_b, inst.succ_indptr, inst.succ_idx)
-    adj = np.zeros((n_b, n_b), dtype=bool)
-    src = np.repeat(np.arange(n), np.diff(inst.succ_indptr))
-    adj[inst.succ_idx, src] = True
+    adj = _adj_mask(n, n_b, inst.succ_indptr, inst.succ_idx)
     return DenseGraph(n=n, n_b=n_b, pred_mat=pred_mat, succ_mat=succ_mat, adj=adj)
+
+
+def graph_from_pack(inst, pack) -> DenseGraph:
+    """A :class:`DenseGraph` that reuses an ``InstancePack``'s already-padded
+    predecessor/successor matrices instead of re-walking the CSR (the
+    ``repro.instances`` boundary: pack once, every sweep consumer reads the
+    same arrays).  Only the Pallas mask ``adj`` is derived here."""
+    adj = _adj_mask(inst.n_tasks, pack.n_b, inst.succ_indptr, inst.succ_idx)
+    return DenseGraph(n=pack.n, n_b=pack.n_b, pred_mat=pack.pred_mat,
+                      succ_mat=pack.succ_mat, adj=adj)
 
 
 # --------------------------------------------------------------------------- #

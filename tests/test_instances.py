@@ -1,0 +1,387 @@
+"""The workload subsystem: family registry, generator properties, packed
+InstanceBatch boundary, lower bounds, suites, and the sweep driver.
+
+Per-family property coverage (the PR-5 satellite checklist): acyclicity,
+producer-before-first-consumer, slow-tier feasibility, bucket-edge sizes
+(31/32/33), and .npz round-trip -> identical solve results.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Budget,
+    exact_schedule,
+    memory_feasible,
+    random_instance,
+    solve,
+    validate_instance,
+)
+from repro.instances import (
+    InstanceBatch,
+    bounds,
+    generate,
+    get_family,
+    get_suite,
+    group_by_bucket,
+    list_families,
+    list_suites,
+    load_npz,
+    lower_bound,
+    pack_instance,
+    register_family,
+    save_npz,
+    sweep,
+)
+
+# small parameterizations per family so the whole matrix stays tier-1 fast
+SMALL = {
+    "random_layered": dict(n_tasks=30, n_data=80),
+    "out_tree": dict(n_tasks=31, fanout=2),
+    "in_tree": dict(n_tasks=33, fanout=2),
+    "fft": dict(width=8),
+    "stencil": dict(width=8, steps=4),
+    "residency": dict(scan_group=1),
+    "pipeline": dict(n_stages=2, n_microbatches=4),
+}
+
+FAMILIES = sorted(SMALL)
+
+
+def small(family: str, seed: int = 0):
+    return generate(family, seed, **SMALL[family])
+
+
+# --------------------------------------------------------------------------- #
+# registry                                                                     #
+# --------------------------------------------------------------------------- #
+def test_registry_lists_all_families():
+    assert set(FAMILIES) <= set(list_families())
+
+
+def test_registry_unknown_family_raises():
+    with pytest.raises(KeyError, match="unknown family"):
+        get_family("no_such_family")
+
+
+def test_registry_duplicate_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        register_family("random_layered", lambda rng: None)
+
+
+def test_family_defaults_apply():
+    fam = get_family("out_tree")
+    inst = fam.generate(0)
+    assert inst.n_tasks == fam.defaults["n_tasks"]
+
+
+# --------------------------------------------------------------------------- #
+# per-family structural properties                                             #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("seed", [0, 3])
+def test_family_instances_are_valid(family, seed):
+    inst = small(family, seed)
+    validate_instance(inst)  # acyclic, compatible cores, slow-tier feasible
+    assert inst.n_tasks >= 2
+    assert (inst.data_size > 0).all()
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_producer_before_first_consumer(family):
+    inst = small(family)
+    topo = inst.topological_order()
+    pos = np.empty(inst.n_tasks, dtype=np.int64)
+    pos[topo] = np.arange(inst.n_tasks)
+    for d in range(inst.n_data):
+        p = inst.producer[d]
+        cons = inst.consumers(d)
+        if p >= 0 and len(cons):
+            assert pos[p] < pos[cons].min(), \
+                f"{family}: block {d} consumed before produced"
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_slow_tier_holds_every_block(family):
+    inst = small(family)
+    slow = np.isinf(inst.mem_cap)
+    assert slow.any()
+    assert inst.data_mem_ok[:, slow].any(axis=1).all()
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_generation_is_deterministic(family):
+    a, b = small(family, 11), small(family, 11)
+    assert np.array_equal(a.proc_time, b.proc_time)
+    assert np.array_equal(a.data_size, b.data_size)
+    assert np.array_equal(a.pred_idx, b.pred_idx)
+
+
+# --------------------------------------------------------------------------- #
+# solvability across backends + lower-bound validity                           #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("backend", ["numpy", "scalar"])
+def test_every_family_solves(family, backend):
+    inst = small(family)
+    rep = solve(inst, "tabu", budget=Budget(max_iters=20, time_limit=10.0),
+                seed=0, backend=backend)
+    sched = exact_schedule(inst, rep.solution)
+    assert sched is not None
+    assert memory_feasible(inst, rep.solution, sched)
+    lb = bounds(inst)
+    assert rep.makespan >= lb["lb"] - 1e-6, \
+        f"{family}: makespan {rep.makespan} beats 'lower' bound {lb['lb']}"
+    assert lb["lb"] == max(lb["cp"], lb["work"], lb["mem"]) > 0
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_every_family_solves_jax_backend(family):
+    pytest.importorskip("jax")
+    inst = small(family)
+    rep_np = solve(inst, "tabu", budget=Budget(max_iters=8), seed=0,
+                   backend="numpy")
+    rep_jx = solve(inst, "tabu", budget=Budget(max_iters=8), seed=0,
+                   backend="jax")
+    assert rep_jx.makespan >= lower_bound(inst) - 1e-6
+    # f32-tolerance parity with the numpy engine on the same trajectory scale
+    assert rep_jx.makespan == pytest.approx(rep_np.makespan, rel=1e-3)
+
+
+@pytest.mark.slow  # device launch compiles; the CI suite smoke leg also covers it
+@pytest.mark.parametrize("family", FAMILIES)
+def test_every_family_solves_device_backend(family):
+    pytest.importorskip("jax")
+    inst = small(family)
+    rep = solve(inst, "tabu_device", walks=1,
+                budget=Budget(max_iters=5, time_limit=120.0), seed=0,
+                device={"sync_every": 4})
+    assert rep.makespan >= lower_bound(inst) - 1e-6
+    assert rep.feasible
+
+
+# --------------------------------------------------------------------------- #
+# vectorized random_instance                                                   #
+# --------------------------------------------------------------------------- #
+def test_random_instance_structural_recipe():
+    inst = random_instance(5, n_tasks=100, n_data=260)
+    validate_instance(inst)
+    # ~5% initial inputs
+    assert int((inst.producer < 0).sum()) == 260 // 20
+    # edges land near the 8x target (data edges + task edges top-up)
+    n_edges = len(inst.task_edges) + len(inst.cons_idx) + len(inst.out_idx)
+    assert n_edges >= 8 * 100
+    assert n_edges <= 8 * 100 + 4 * 260  # <= target + max data edges
+    # consumers always after producers (DAG wiring invariant)
+    for d in range(inst.n_data):
+        p = inst.producer[d]
+        if p >= 0:
+            assert (inst.consumers(d) > p).all()
+    # a restricted task still has its fast cores
+    assert np.isfinite(inst.proc_time[:, :2]).all()
+
+
+def test_random_instance_matches_registered_family():
+    a = random_instance(9, n_tasks=40, n_data=100)
+    b = generate("random_layered", 9, n_tasks=40, n_data=100)
+    assert np.array_equal(a.proc_time, b.proc_time)
+    assert np.array_equal(a.cons_idx, b.cons_idx)
+    assert np.array_equal(a.data_size, b.data_size)
+
+
+def test_topological_order_is_cached_and_readonly():
+    inst = small("random_layered")
+    t1 = inst.topological_order()
+    t2 = inst.topological_order()
+    assert t1 is t2
+    assert not t1.flags.writeable
+    with pytest.raises(ValueError):
+        t1[0] = 0
+
+
+# --------------------------------------------------------------------------- #
+# InstanceBatch boundary + bucket edges                                        #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("n_tasks", [31, 32, 33])
+def test_bucket_edge_sizes(n_tasks):
+    inst = generate("out_tree", 0, n_tasks=n_tasks, fanout=2)
+    ip = pack_instance(inst)
+    assert ip.n == n_tasks
+    assert ip.n_b == (32 if n_tasks <= 32 else 64)
+    assert ip.proc_time.shape == (ip.n_b, ip.p_b)
+    rep = solve(inst, "tabu", budget=Budget(max_iters=5), seed=0)
+    assert rep.makespan >= lower_bound(inst) - 1e-6
+
+
+def test_instance_batch_shares_buckets():
+    insts = [generate("out_tree", s, n_tasks=n, fanout=2)
+             for s, n in enumerate((31, 33, 40))]
+    batch = InstanceBatch.from_instances(insts)
+    assert batch.n_b == 64  # max bucket across the batch
+    assert all(ip.n_b == 64 for ip in batch.packs)
+    assert [ip.n for ip in batch.packs] == [31, 33, 40]
+    arrays = batch.arrays()
+    assert arrays["proc_time"].shape[0] == 3
+    assert np.array_equal(arrays["n"], [31, 33, 40])
+    # the shared-width dense matrices really are shared
+    assert len({ip.pred_mat.shape for ip in batch.packs}) == 1
+
+
+def test_instance_batch_rejects_mixed_tier_counts():
+    a = small("random_layered")          # 3 tiers
+    b = generate("pipeline", 0, n_stages=3, n_microbatches=2)  # 4 tiers
+    with pytest.raises(ValueError, match="memory-tier"):
+        InstanceBatch.from_instances([a, b])
+
+
+def test_group_by_bucket_separates_shapes():
+    insts = [generate("out_tree", 0, n_tasks=31),
+             generate("fft", 0, width=8),        # same (32, 10, 32, 3) bucket
+             generate("out_tree", 0, n_tasks=40)]
+    groups = group_by_bucket(insts)
+    assert sorted(len(g) for g in groups) == [1, 2]
+
+
+def test_batch_evaluator_consumes_pack():
+    pytest.importorskip("jax")
+    inst = small("fft")
+    batch = InstanceBatch.from_instances([inst])
+    sols = [solve(inst, f"greedy:{s}", seed=0).solution
+            for s in ("slack_first", "r_first")]
+    ev_pack = batch.evaluator(0, backend="jax").evaluate(sols, tails=True)
+    ev_ref = batch.evaluator(0, backend="numpy").evaluate(sols, tails=True)
+    assert np.allclose(ev_pack.makespan, ev_ref.makespan, rtol=1e-6)
+    assert np.array_equal(ev_pack.feasible, ev_ref.feasible)
+
+
+# --------------------------------------------------------------------------- #
+# suites: registry, npz round-trip, sweep                                      #
+# --------------------------------------------------------------------------- #
+def test_suite_registry():
+    assert {"table2", "trees_small", "fft_wide", "stencil_small",
+            "model_derived", "smoke"} <= set(list_suites())
+    smoke = get_suite("smoke")
+    # the CI sweep suite covers every registered family
+    assert set(smoke.families) == set(list_families())
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_npz_roundtrip_identical_solve(tmp_path, family):
+    inst = small(family)
+    path = save_npz(str(tmp_path / "suite.npz"), [inst])
+    (back,) = load_npz(path)
+    assert back.name == inst.name
+    assert np.array_equal(back.proc_time, inst.proc_time)
+    assert np.array_equal(back.pred_idx, inst.pred_idx)
+    budget = Budget(max_iters=10)
+    a = solve(inst, "tabu", budget=budget, seed=0)
+    b = solve(back, "tabu", budget=budget, seed=0)
+    assert a.makespan == b.makespan
+    assert a.history == b.history
+    assert a.n_exact_evals == b.n_exact_evals
+
+
+def test_sweep_numpy_reports_rows_and_families():
+    rep = sweep("trees_small", solver="tabu_multiwalk", backend="numpy",
+                budget=Budget(max_iters=10, time_limit=30.0), walks=2)
+    assert len(rep.rows) == 4
+    assert rep.buckets >= 1 and rep.compiles == 0
+    for row in rep.rows:
+        assert row["makespan"] >= row["lb"] - 1e-6
+        assert row["ratio"] >= 1.0 - 1e-9
+        assert set(row["lb_parts"]) == {"cp", "work", "mem"}
+    assert set(rep.families) == {"out_tree", "in_tree"}
+    assert all(v["n"] == 2 for v in rep.families.values())
+
+
+def test_fft_rejects_too_deep_stages():
+    with pytest.raises(ValueError, match="stages must be in"):
+        generate("fft", 0, width=8, stages=5)
+
+
+def test_sweep_rejects_solver_and_kwargs_off_device():
+    with pytest.raises(ValueError, match="device config requires"):
+        sweep("trees_small", backend="numpy", device={"sync_every": 8})
+
+
+def test_sweep_device_rejects_foreign_solver():
+    with pytest.raises(ValueError, match="not supported"):
+        sweep("trees_small", solver="greedy:slack_first", backend="device")
+
+
+def test_walk_inits_match_solver_construction():
+    """The sweep's walk inits ARE the tabu_multiwalk solver's (one shared
+    helper), so device rows start exactly where numpy solver rows start."""
+    from repro.core.api import multiwalk_inits
+    from repro.instances.suites import _walk_inits
+
+    inst = small("fft")
+    sols, labels = multiwalk_inits(inst, 3, seed=5)
+    sweep_sols = _walk_inits(inst, 3, seed=5)
+    assert labels[0] == "slack_first" and len(sols) == 3
+    for a, b in zip(sols, sweep_sols):
+        assert np.array_equal(a.assign, b.assign)
+        assert np.array_equal(a.mem, b.mem)
+        assert a.proc_seq == b.proc_seq
+
+
+def test_mem_bound_respects_lifetime_reuse():
+    """Regression for the invalid total-volume spill surcharge: a chain
+    whose blocks are live two-at-a-time must not be charged as if all of
+    them had to fit in fast memory at once."""
+    inst = generate("out_tree", 3, n_tasks=30, fanout=1)
+    inst.access_time[:, -1] *= 200          # make any bogus surcharge huge
+    rep = solve(inst, "tabu", budget=Budget(max_iters=60, time_limit=20.0),
+                seed=0)
+    sched = exact_schedule(inst, rep.solution)
+    assert memory_feasible(inst, rep.solution, sched)
+    assert rep.makespan >= lower_bound(inst) - 1e-6
+
+
+def test_sweep_accepts_prebuilt_instances():
+    insts = [generate("fft", s, width=8) for s in range(2)]
+    rep = sweep(insts, solver="greedy:slack_first", backend="numpy")
+    assert len(rep.rows) == 2
+    assert rep.suite == "<instances>"
+    # raw generate() output still aggregates under its real family
+    assert set(rep.families) == {"fft"}
+
+
+def test_sweep_mixed_raw_families_aggregate_separately():
+    insts = [generate("fft", 0, width=8), generate("out_tree", 1, n_tasks=31)]
+    rep = sweep(insts, solver="greedy:slack_first", backend="numpy")
+    assert set(rep.families) == {"fft", "out_tree"}
+
+
+def test_save_npz_returns_real_path(tmp_path):
+    import os
+
+    path = save_npz(str(tmp_path / "suite"), [small("fft")])  # no .npz suffix
+    assert path.endswith(".npz") and os.path.exists(path)
+    (back,) = load_npz(path)
+    assert getattr(back, "family") == "fft"
+
+
+@pytest.mark.slow  # one vmapped device launch per bucket: jit compiles
+def test_sweep_device_compiles_once_per_bucket():
+    pytest.importorskip("jax")
+    rep = sweep("fft_wide", backend="device", walks=2,
+                budget=Budget(max_iters=4, time_limit=120.0),
+                device={"sync_every": 4})
+    assert len(rep.rows) == 2
+    assert rep.compiles <= rep.buckets  # the launch-cache proof
+    for row in rep.rows:
+        assert row["makespan"] >= row["lb"] - 1e-6
+
+
+@pytest.mark.slow  # device + numpy sweeps over the same suite
+def test_sweep_device_matches_numpy_inits():
+    """Device rows start from the same walk inits as the numpy rows, so the
+    initial incumbents agree exactly even where the engines then diverge."""
+    pytest.importorskip("jax")
+    budget = Budget(max_iters=3, time_limit=120.0)
+    rep_np = sweep("stencil_small", solver="tabu_multiwalk", backend="numpy",
+                   budget=budget, walks=2, seed=0)
+    rep_dev = sweep("stencil_small", backend="device", budget=budget,
+                    walks=2, seed=0, device={"sync_every": 4})
+    for a, b in zip(rep_np.rows, rep_dev.rows):
+        assert a["initial_makespan"] == b["initial_makespan"]

@@ -18,6 +18,7 @@ from repro.core import (  # noqa: E402
     solve,
     validate_instance,
 )
+from repro.instances import generate, lower_bound  # noqa: E402
 
 from test_core import assert_schedule_valid  # noqa: E402
 
@@ -40,6 +41,47 @@ def test_property_pipeline_valid(seed, n_tasks, frac):
     r, q, slack, crit = heads_tails(inst, rep.solution, sched)
     assert np.isclose((r + q).max(), sched.makespan, rtol=1e-9)
     assert crit.any()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    data=st.data(),
+    family=st.sampled_from(
+        ("random_layered", "out_tree", "in_tree", "fft", "stencil")),
+    seed=st.integers(0, 10_000),
+)
+def test_property_registered_families_valid(data, family, seed):
+    """Every synthetic family, across random shape knobs: validated DAG,
+    producer-before-consumer, schedulable, memory-feasible, and never below
+    the instance lower bound."""
+    if family in ("out_tree", "in_tree"):
+        kw = dict(n_tasks=data.draw(st.integers(8, 80)),
+                  fanout=data.draw(st.integers(1, 5)),
+                  depth_profile=data.draw(
+                      st.sampled_from(("flat", "shrink", "grow"))))
+    elif family == "fft":
+        kw = dict(width=data.draw(st.sampled_from((4, 8, 16))))
+    elif family == "stencil":
+        kw = dict(width=data.draw(st.integers(2, 12)),
+                  steps=data.draw(st.integers(2, 6)),
+                  radius=data.draw(st.integers(0, 2)))
+    else:
+        kw = dict(n_tasks=data.draw(st.integers(8, 40)),
+                  n_data=data.draw(st.integers(16, 80)))
+    inst = generate(family, seed, **kw)
+    validate_instance(inst)
+    topo = np.empty(inst.n_tasks, dtype=np.int64)
+    topo[inst.topological_order()] = np.arange(inst.n_tasks)
+    for d in range(inst.n_data):
+        p, cons = inst.producer[d], inst.consumers(d)
+        if p >= 0 and len(cons):
+            assert topo[p] < topo[cons].min()
+    rep = solve(inst, "greedy:slack_first", seed=0)
+    sched = exact_schedule(inst, rep.solution)
+    assert sched is not None
+    assert_schedule_valid(inst, rep.solution, sched)
+    assert memory_feasible(inst, rep.solution, sched)
+    assert rep.makespan >= lower_bound(inst) - 1e-6
 
 
 @settings(max_examples=8, deadline=None)
