@@ -325,7 +325,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--backend", choices=("numpy", "device", "suite"),
                     default="numpy", help="which engine lane to run")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persist jit-compiled launches under DIR (JAX "
+                         "compilation cache); cold runs seed it, warm runs "
+                         "load from it")
     args = ap.parse_args(argv)
+
+    compile_cache_on = False
+    if args.compile_cache:
+        from repro.serve import enable_compilation_cache
+
+        compile_cache_on = enable_compilation_cache(args.compile_cache)
 
     if args.smoke:
         n_tasks, n_data, iters, eq_evals, eq_unimproved = 40, 100, 8, 2000, 10
@@ -334,7 +344,8 @@ def main(argv=None) -> dict:
 
     payload = {"scale": {"n_tasks": n_tasks, "n_data": n_data,
                          "smoke": args.smoke},
-               "backend": args.backend}
+               "backend": args.backend,
+               "compile_cache": compile_cache_on}
 
     if args.backend == "suite":
         payload["suite_lane"] = suite_lane(args)
@@ -362,6 +373,10 @@ def main(argv=None) -> dict:
             "throughput_ratio": lane["throughput_ratio"],
             "row_walk_iters_per_s": lane["row_sweep"]["walk_iters_per_s"],
             "platform": lane["platform"],
+            # cold-start accounting: with --compile-cache a second CI run
+            # should show this dropping toward zero (persistent cache hit)
+            "compile_seconds": lane["device"]["compile_seconds"],
+            "compile_cache": compile_cache_on,
         }, scale=payload["scale"])
         print(f"wrote {path}  (device {lane['throughput_ratio']:.2f}x numpy, "
               f"parity={lane['w1_parity']})")

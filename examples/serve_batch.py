@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/serve_batch.py
 """
-from repro.launch.serve import serve_main
+from repro.launch.model_serve import serve_main
 
 if __name__ == "__main__":
     # a hybrid arch to exercise ring caches + recurrent state, and an MoE

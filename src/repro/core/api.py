@@ -436,11 +436,26 @@ def _solve_tabu_multiwalk(
             on_iteration=callbacks.on_iteration,
             on_improvement=callbacks.on_improvement,
         )
+    return _report_from_multiwalk(_method, inst, res, ts.backend,
+                                  time.monotonic() - t0)
+
+
+def _report_from_multiwalk(
+    method: str,
+    inst: Instance,
+    res,
+    backend: str,
+    wall_time: float,
+) -> SolveReport:
+    """Build a :class:`SolveReport` from a ``MultiWalkResult`` — shared by
+    the ``tabu_multiwalk``/``tabu_device`` solvers and the serving engine
+    (``repro.serve.engine``), so a served request's report is structurally
+    identical to a solo ``solve()`` report."""
     sched = exact_schedule(inst, res.best)
     assert sched is not None
     extras = {
         "walks": res.walks,
-        "backend": ts.backend,
+        "backend": backend,
         "per_walk": [
             {"init": wi.init_label,
              "initial_makespan": wi.initial_makespan,
@@ -453,7 +468,7 @@ def _solve_tabu_multiwalk(
     if hasattr(res, "compile_seconds"):
         extras["compile_seconds"] = res.compile_seconds
     return SolveReport(
-        method=_method,
+        method=method,
         solution=res.best,
         makespan=res.best_makespan,
         feasible=memory_feasible(inst, res.best, sched),
@@ -461,7 +476,7 @@ def _solve_tabu_multiwalk(
         iterations=res.iterations,
         n_exact_evals=res.n_exact_evals,
         n_approx_evals=res.n_approx_evals,
-        wall_time=time.monotonic() - t0,
+        wall_time=wall_time,
         history=res.history,
         stop_reason=res.stop_reason,
         extras=extras,

@@ -67,6 +67,7 @@ __all__ = [
     "MEM_UPDATE_DISABLED",
     "device_multiwalk",
     "solve_instances",
+    "warm_launches",
     "launch_cache_info",
 ]
 
@@ -89,12 +90,28 @@ class DeviceConfig:
     perturb: bool = True          # threefry random move on stalled rounds
 
 
-_LAUNCHES = LRUCache(maxsize=8)
+# sized for serving traffic: a few signature classes × quantized batch
+# sizes plus solo (batch=0) baselines must coexist without thrashing
+_LAUNCHES = LRUCache(maxsize=16)
+
+# crit-bucket overflow→relaunch escalations since process start.  Each one
+# costs a fresh jit compile mid-run; the serve engine and the benches read
+# deltas of this counter so compile storms under traffic are observable
+# instead of silent.
+_OVERFLOW_RELAUNCHES = 0
 
 
 def launch_cache_info() -> dict:
-    """Compiled-launch cache counters (`{hits, misses, currsize, maxsize}`)."""
-    return _LAUNCHES.info()
+    """Compiled-launch cache counters
+    (`{hits, misses, evictions, currsize, maxsize, overflow_relaunches}`)."""
+    info = _LAUNCHES.info()
+    info["overflow_relaunches"] = _OVERFLOW_RELAUNCHES
+    return info
+
+
+def _note_overflow_relaunch() -> None:
+    global _OVERFLOW_RELAUNCHES
+    _OVERFLOW_RELAUNCHES += 1
 
 
 # --------------------------------------------------------------------------- #
@@ -881,7 +898,9 @@ def _get_launch(ip: InstancePack, w_count: int, params: TSParams,
     key = (ip.n_b, ip.p_b, ip.d_b, w_count, crit_cap, cfg.sync_every,
            params.top_k, params.n_change_core_positions,
            params.max_unimproved, params.max_iters, params.max_evals,
-           cfg.perturb, cfg.donate, ip.in_blk.shape[1], ip.out_blk.shape[1],
+           cfg.perturb, cfg.donate,
+           ip.pred_mat.shape[1], ip.succ_mat.shape[1],
+           ip.in_blk.shape[1], ip.out_blk.shape[1],
            len(ip.in_idx), len(ip.out_idx), batch)
     fn = _LAUNCHES.get(key)
     if fn is not None:
@@ -1015,6 +1034,7 @@ def device_multiwalk(
                 crit_cap = max(crit_cap * 2, 32)
                 if crit_cap > ip.n_b:
                     crit_cap = ip.n_b
+                _note_overflow_relaunch()
                 continue
 
             it_now = int(state["it"])
@@ -1162,6 +1182,8 @@ def solve_instances(
     params: TSParams | None = None,
     *,
     config: DeviceConfig | None = None,
+    seeds: "list[int] | None" = None,
+    callbacks: "list | None" = None,
 ) -> list[MultiWalkResult]:
     """Run the device engine over a batch of same-bucket instances in one
     vmapped compiled call per sync — an entire Table-II row per launch.
@@ -1177,6 +1199,17 @@ def solve_instances(
     Budgets apply per instance; wall time is checked between launches.
     Algorithm 3 runs host-side at sync boundaries exactly like the
     single-instance driver.
+
+    ``seeds`` gives each instance its own search seed (tenure/perturbation
+    stream — the value ``params.seed`` carries on a solo run); the compiled
+    launch is seed-independent, so mixed-seed batches still share one
+    program.  ``callbacks`` is an optional per-instance list of
+    :class:`~repro.core.api.Callbacks`-shaped objects (``None`` entries
+    allowed): ``on_improvement``/``on_iteration`` fire per instance at sync
+    boundaries with that instance's own :class:`TSEvent`, and a truthy
+    return stops *that instance only* (its ``stop_reason`` becomes
+    ``"callback"``).  This is the anytime-incumbent path the serve engine
+    fans out to streaming clients.
     """
     import jax
     from jax.experimental import enable_x64
@@ -1190,6 +1223,11 @@ def solve_instances(
     assert n_inst >= 1 and len(inits) == n_inst
     w_count = len(inits[0])
     assert all(len(x) == w_count for x in inits), "equal walk counts required"
+    if seeds is None:
+        seeds = [params.seed] * n_inst
+    assert len(seeds) == n_inst, "one seed per instance"
+    if callbacks is not None:
+        assert len(callbacks) == n_inst, "one callback slot per instance"
     t0 = time.monotonic()
 
     cur_sols, scheds = [], []
@@ -1210,8 +1248,8 @@ def solve_instances(
         _auto_crit_cap(i, s, sc)
         for i, s, sc in zip(instances, cur_sols, scheds))
 
-    states = [pack_state(ip2, s, sc, params.seed)
-              for ip2, s, sc in zip(packs, cur_sols, scheds)]
+    states = [pack_state(ip2, s, sc, sd)
+              for ip2, s, sc, sd in zip(packs, cur_sols, scheds, seeds)]
     init_best = np.stack([st["best_mk"] for st in states])   # (I, W)
     histories = [[[(0, float(init_best[i, w]))] for w in range(w_count)]
                  for i in range(n_inst)]
@@ -1219,6 +1257,7 @@ def solve_instances(
     g_best = [h[0][1] for h in g_hist]
     mem_updates_on = params.mem_update_period < MEM_UPDATE_DISABLED
     n_exact_host = np.zeros(n_inst, dtype=np.int64)
+    cb_stop = np.zeros(n_inst, dtype=bool)
     timed_out = False
     compile_s = 0.0
 
@@ -1246,6 +1285,7 @@ def solve_instances(
             state = {k: np.array(v) for k, v in state_j.items()}  # writable
             ser = {k: np.asarray(v) for k, v in series.items()}
 
+            sync_improved = np.zeros(n_inst, dtype=bool)
             for i in range(n_inst):
                 for r in range(cfg.sync_every):
                     if not ser["ran"][i, r]:
@@ -1259,11 +1299,44 @@ def solve_instances(
                     if nb < g_best[i]:
                         g_best[i] = nb
                         g_hist[i].append((it_r, nb))
+                        sync_improved[i] = True
 
             if state["overflow"].any():
                 state["overflow"][:] = False
                 crit_cap = min(max(crit_cap * 2, 32), n_b)
+                _note_overflow_relaunch()
                 continue
+
+            if callbacks is not None:
+                # per-instance anytime hooks, fired at the same boundary the
+                # single-instance driver uses (after overflow handling, before
+                # Alg-3); a truthy return retires only that instance
+                for i in range(n_inst):
+                    cb = callbacks[i]
+                    if cb is None or cb_stop[i]:
+                        continue
+                    act = state["active"][i]
+                    if not act.any() and not sync_improved[i]:
+                        continue
+                    cur_min = float(state["cur_mk"][i][act].min()) \
+                        if act.any() else g_best[i]
+                    ev = TSEvent(
+                        iteration=int(state["it"][i]),
+                        best_makespan=g_best[i],
+                        current_makespan=cur_min,
+                        elapsed=time.monotonic() - t0,
+                        n_exact_evals=int(state["n_exact"][i])
+                        + int(n_exact_host[i]),
+                        n_approx_evals=int(state["n_approx"][i]),
+                        improved=bool(sync_improved[i]))
+                    on_imp = getattr(cb, "on_improvement", None)
+                    if sync_improved[i] and on_imp is not None and on_imp(ev):
+                        cb_stop[i] = True
+                    on_it = getattr(cb, "on_iteration", None)
+                    if not cb_stop[i] and on_it is not None and on_it(ev):
+                        cb_stop[i] = True
+                    if cb_stop[i]:
+                        state["active"][i, :] = False
 
             done = ~state["active"].any(axis=1) | state["stop"]
             if params.max_iters is not None:
@@ -1310,7 +1383,9 @@ def solve_instances(
     results = []
     for i in range(n_inst):
         active = state["active"][i]
-        if not active.any():
+        if cb_stop[i]:
+            stop_reason = "callback"
+        elif not active.any():
             stop_reason = "converged"
         elif timed_out:
             stop_reason = "time_limit"
@@ -1354,3 +1429,80 @@ def solve_instances(
         res.compile_seconds = compile_s  # type: ignore[attr-defined]
         results.append(res)
     return results
+
+
+# --------------------------------------------------------------------------- #
+# warm pool                                                                    #
+# --------------------------------------------------------------------------- #
+def warm_launches(
+    instances: "list[Instance] | InstanceBatch",
+    walks: int,
+    params: TSParams | None = None,
+    *,
+    config: DeviceConfig | None = None,
+    batch_sizes: tuple = (1,),
+) -> dict:
+    """Pre-compile the ``solve_instances`` programs one launch shape needs.
+
+    ``instances`` (a list or prebuilt :class:`InstanceBatch`) declares the
+    shape — shared buckets, dense widths, padded edge lengths; ``walks`` and
+    ``params`` supply the compile-relevant search knobs; ``batch_sizes`` are
+    the vmap widths to warm (the serve engine's quantized batch sizes).
+    Each missing program is compiled by invoking it once for one
+    ``sync_every`` horizon on a replicated copy of the first instance, so
+    the warm-up work is bounded and the executable lands in both the
+    in-process launch LRU and — when ``jax_compilation_cache_dir`` is set —
+    JAX's persistent compilation cache.  Returns per-size compile seconds
+    and launch-cache counter deltas.
+    """
+    import jax
+    from jax.experimental import enable_x64
+
+    from .api import multiwalk_inits  # lazy: api imports this module lazily
+
+    params = params or TSParams()
+    cfg = config or DeviceConfig()
+    batch = instances if isinstance(instances, InstanceBatch) \
+        else InstanceBatch.from_instances(instances)
+    inst = batch.instances[0]
+    ip = batch.packs[0]
+    cap = cfg.crit_cap or batch.n_b
+    init_sols, _ = multiwalk_inits(inst, walks, params.seed)
+    sols = [memory_update(inst, s, refresh_every=params.mem_refresh_every,
+                          scalar=params.mem_update_scalar) for s in init_sols]
+    scheds = [exact_schedule(inst, s) for s in sols]
+    assert all(s is not None for s in scheds), "warm instance must be solvable"
+    before = launch_cache_info()
+    per_size: dict = {}
+    with enable_x64():
+        import jax.numpy as jnp
+
+        ia = ia_from_pack(ip)
+        state = pack_state(ip, sols, scheds, params.seed)
+        for bs in sorted({int(b) for b in batch_sizes}):
+            assert bs >= 1, "batch sizes must be positive"
+            t0 = time.monotonic()
+            launch, fresh = _get_launch(ip, walks, params, cap, cfg, batch=bs)
+            if fresh:
+                ia_b = {k: jnp.asarray(np.stack([v] * bs))
+                        for k, v in ia.items()}
+                st_b = {k: jnp.asarray(np.stack([v] * bs))
+                        for k, v in state.items()}
+                series0 = jax.vmap(
+                    lambda _: _series_buffers(cfg.sync_every, walks))(
+                    jnp.arange(bs))
+                out_state, _series = launch(ia_b, st_b, series0)
+                jax.block_until_ready(out_state)
+            per_size[bs] = {"fresh": fresh,
+                            "seconds": time.monotonic() - t0}
+    after = launch_cache_info()
+    return {
+        "bucket_key": batch.bucket_key,
+        "per_size": per_size,
+        "compile_seconds": sum(v["seconds"] for v in per_size.values()
+                               if v["fresh"]),
+        "cache_delta": {k: after[k] - before[k]
+                        for k in ("hits", "misses", "evictions",
+                                  "overflow_relaunches")},
+        "cache": after,
+    }

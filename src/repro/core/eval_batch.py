@@ -85,6 +85,7 @@ class LRUCache:
         self._d: "dict" = {}
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key):
         try:
@@ -101,12 +102,14 @@ class LRUCache:
         self._d[key] = val
         while len(self._d) > self.maxsize:
             self._d.pop(next(iter(self._d)))
+            self.evictions += 1
 
     def __len__(self) -> int:
         return len(self._d)
 
     def info(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
                 "currsize": len(self._d), "maxsize": self.maxsize}
 
 

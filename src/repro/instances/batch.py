@@ -202,7 +202,14 @@ class InstanceBatch:
     def from_instances(cls, instances: Sequence[Instance], *,
                        n_b: int | None = None, p_b: int | None = None,
                        d_b: int | None = None,
+                       widths: tuple[int, int, int, int] | None = None,
+                       e_b: tuple[int, int] | None = None,
                        validate: bool = True) -> "InstanceBatch":
+        """``widths``/``e_b`` are *floors*: the shared dense widths and padded
+        edge-list lengths are the max of the computed values and the floors.
+        The serving layer pins them to quantized signature values so every
+        batch cut from one signature class lands on the exact same
+        ``bucket_key`` (and therefore the same compiled launch)."""
         from ..kernels import schedule_dp as sdp
 
         instances = tuple(instances)
@@ -223,11 +230,17 @@ class InstanceBatch:
             deg = np.diff(indptr)
             return max(1, int(deg.max()) if len(deg) else 1)
 
+        w_floor = widths or (1, 1, 1, 1)
         widths = tuple(
-            max(deg_width(i, getattr(i, f)) for i in instances)
-            for f in ("pred_indptr", "succ_indptr", "in_indptr", "out_indptr"))
-        e_b = (max(_padded_edge_len(len(i.in_idx)) for i in instances),
-               max(_padded_edge_len(len(i.out_idx)) for i in instances))
+            max(w_floor[j],
+                max(deg_width(i, getattr(i, f)) for i in instances))
+            for j, f in enumerate(("pred_indptr", "succ_indptr",
+                                   "in_indptr", "out_indptr")))
+        e_floor = e_b or (0, 0)
+        e_b = (max(_padded_edge_len(len(i.in_idx), e_floor[0])
+                   for i in instances),
+               max(_padded_edge_len(len(i.out_idx), e_floor[1])
+                   for i in instances))
         packs = tuple(pack_instance(i, n_b=n_b, p_b=p_b, d_b=d_b,
                                     widths=widths, e_b=e_b)
                       for i in instances)

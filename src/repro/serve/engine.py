@@ -1,0 +1,257 @@
+"""Warm-pool execution engine: cut batches → compiled launches → reports.
+
+The engine owns the backend-facing half of the service.  For the device
+backend it turns a :class:`~repro.serve.batcher.CutBatch` into an
+:class:`~repro.instances.InstanceBatch` whose widths/edge pads are pinned
+to the cut's quantized signature (``assemble``, host-side — overlappable
+with device compute), then runs ``device_search.solve_instances`` on it
+(``execute``) and fans the per-instance ``MultiWalkResult``s out as
+:class:`~repro.core.api.SolveReport`s built by the exact same helper the
+solo ``tabu_device`` solver uses — a served request's report is
+structurally identical to, and bit-identical in content with, a solo
+``solve()`` at the same seed/budget/backend.
+
+Batch sizes are quantized to ``EngineConfig.batch_sizes`` (pad lanes
+repeat the last request and are dropped at fan-out; the vmap batch
+identity guarantees they cannot perturb real lanes), so a handful of
+compiled programs per signature covers every cut width.  ``warmup``
+pre-compiles those programs from declared :class:`WarmSpec` traffic
+classes via ``device_search.warm_launches`` — backed by the launch LRU
+and, when ``compilation_cache_dir`` is set, JAX's persistent cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from ..core.api import (
+    Budget,
+    Callbacks,
+    SolveReport,
+    _budgeted_ts_params,
+    _report_from_multiwalk,
+    multiwalk_inits,
+    solve,
+)
+from ..core.mdfg import Instance
+from ..core.tabu import TSParams
+from .batcher import CutBatch
+from .compile_cache import enable_compilation_cache
+from .queue import SolveRequest, launch_signature
+
+__all__ = ["EngineConfig", "WarmSpec", "RequestResult", "AssembledBatch",
+           "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Backend and launch-shape knobs.
+
+    ``sync_every`` is the device sync horizon — larger amortizes dispatch
+    but coarsens anytime-incumbent granularity and budget precision (see
+    DESIGN.md §11).  ``crit_cap=None`` means full capacity (``batch.n_b``:
+    no overflow relaunches under traffic).  ``batch_sizes`` are the
+    quantized vmap widths the warm pool compiles.
+    """
+
+    backend: str = "device"  # "device" | "numpy"
+    sync_every: int = 16
+    crit_cap: "int | None" = None
+    batch_sizes: tuple = (1, 2, 4, 8)
+    compilation_cache_dir: "str | None" = None
+    validate: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmSpec:
+    """A declared traffic class to pre-compile: a representative instance
+    plus the walk count and budget its requests will arrive with."""
+
+    instance: Instance
+    walks: int
+    budget: Budget
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """What the service hands back per request: the solo-identical report
+    plus serving metrics (queue wait, batch shape, cut reason, cache
+    deltas; the service adds end-to-end ``latency``)."""
+
+    request: SolveRequest
+    report: SolveReport
+    metrics: dict
+
+
+@dataclasses.dataclass
+class AssembledBatch:
+    """Host-side prepared work for one cut (built while the device runs
+    the previous launch)."""
+
+    cut: CutBatch
+    instances: list
+    inits: list
+    seeds: list
+    params: TSParams
+    batch: object  # InstanceBatch on the device backend, else None
+    padded_to: int
+    assemble_seconds: float
+
+
+class Engine:
+    def __init__(self, config: "EngineConfig | None" = None, *,
+                 params: "TSParams | None" = None):
+        self.config = config or EngineConfig()
+        self.params = params or TSParams()
+        self.persistent_cache = False
+        if self.config.compilation_cache_dir:
+            self.persistent_cache = enable_compilation_cache(
+                self.config.compilation_cache_dir)
+        self.warm_info: dict = {}
+        self.n_batches = 0
+        self.n_requests = 0
+
+    # -- signature → pinned shapes ----------------------------------------
+    def _make_batch(self, instances, signature):
+        from ..instances.batch import InstanceBatch
+
+        n_b, p_b, d_b, _n_mems, widths, e_b = signature[:6]
+        return InstanceBatch.from_instances(
+            instances, n_b=n_b, p_b=p_b, d_b=d_b, widths=widths, e_b=e_b,
+            validate=self.config.validate)
+
+    def _quantized_size(self, n: int) -> int:
+        for b in sorted(self.config.batch_sizes):
+            if b >= n:
+                return int(b)
+        return n  # cut wider than every declared size: compile exact width
+
+    # -- warm pool ---------------------------------------------------------
+    def warmup(self, specs) -> dict:
+        """Pre-compile every launch the declared traffic classes need (one
+        program per signature × quantized batch size).  No-op on the numpy
+        backend.  Returns compile seconds per signature — the cold-start
+        cost the persistent compilation cache amortizes across runs."""
+        specs = list(specs)
+        if self.config.backend != "device" or not specs:
+            self.warm_info = {"compile_seconds": 0.0, "signatures": 0,
+                              "per_signature": []}
+            return self.warm_info
+        from ..core.device_search import DeviceConfig, warm_launches
+
+        total, per_sig, seen = 0.0, [], set()
+        for spec in specs:
+            sig = launch_signature(spec.instance, spec.walks, spec.budget)
+            if sig in seen:
+                continue
+            seen.add(sig)
+            batch = self._make_batch([spec.instance], sig)
+            cap = self.config.crit_cap or batch.n_b
+            ts = _budgeted_ts_params(self.params, spec.budget,
+                                     self.params.seed)
+            info = warm_launches(
+                batch, spec.walks, ts,
+                config=DeviceConfig(sync_every=self.config.sync_every,
+                                    crit_cap=cap),
+                batch_sizes=tuple(self.config.batch_sizes))
+            total += info["compile_seconds"]
+            per_sig.append({"bucket_key": list(info["bucket_key"]),
+                            "walks": spec.walks,
+                            "compile_seconds": info["compile_seconds"],
+                            "cache_delta": info["cache_delta"]})
+        self.warm_info = {"compile_seconds": total,
+                          "signatures": len(per_sig),
+                          "persistent_cache": self.persistent_cache,
+                          "per_signature": per_sig}
+        return self.warm_info
+
+    # -- per-cut pipeline --------------------------------------------------
+    def assemble(self, cut: CutBatch) -> AssembledBatch:
+        """Host-side batch prep: walk inits per request (exactly
+        ``multiwalk_inits`` — the solo path's starts), quantized padding,
+        and the pinned-shape ``InstanceBatch``.  Runs concurrently with the
+        previous launch's device compute."""
+        t0 = time.monotonic()
+        reqs = cut.requests
+        walks = reqs[0].walks
+        ts = _budgeted_ts_params(self.params, reqs[0].budget, reqs[0].seed)
+        instances = [r.instance for r in reqs]
+        seeds = [r.seed for r in reqs]
+        inits = [multiwalk_inits(r.instance, walks, r.seed)[0] for r in reqs]
+        batch = None
+        padded_to = len(reqs)
+        if self.config.backend == "device":
+            padded_to = self._quantized_size(len(reqs))
+            while len(instances) < padded_to:
+                # pad lanes repeat the last request; vmap batch identity
+                # keeps them from touching real lanes, and fan-out drops them
+                instances.append(reqs[-1].instance)
+                inits.append([s.copy() for s in inits[len(reqs) - 1]])
+                seeds.append(reqs[-1].seed)
+            batch = self._make_batch(instances, cut.signature)
+        return AssembledBatch(cut=cut, instances=instances, inits=inits,
+                              seeds=seeds, params=ts, batch=batch,
+                              padded_to=padded_to,
+                              assemble_seconds=time.monotonic() - t0)
+
+    def execute(self, assembled: AssembledBatch,
+                callbacks: "list | None" = None) -> "list[RequestResult]":
+        """Run one assembled batch and fan results out per request.
+        ``callbacks[i]`` (``Callbacks``-shaped, optional) receives request
+        ``i``'s anytime events at sync boundaries."""
+        cut = assembled.cut
+        reqs = cut.requests
+        t0 = time.monotonic()
+        results: "list[RequestResult]" = []
+        if self.config.backend == "device":
+            from ..core.device_search import (
+                DeviceConfig,
+                launch_cache_info,
+                solve_instances,
+            )
+
+            cache0 = launch_cache_info()
+            cap = self.config.crit_cap or assembled.batch.n_b
+            cbs = None
+            if callbacks is not None:
+                cbs = list(callbacks) + \
+                    [None] * (assembled.padded_to - len(reqs))
+            rs = solve_instances(
+                assembled.batch, assembled.inits, assembled.params,
+                config=DeviceConfig(sync_every=self.config.sync_every,
+                                    crit_cap=cap),
+                seeds=assembled.seeds, callbacks=cbs)
+            wall = time.monotonic() - t0
+            cache1 = launch_cache_info()
+            delta = {k: cache1[k] - cache0[k]
+                     for k in ("hits", "misses", "evictions",
+                               "overflow_relaunches")}
+            for i, r in enumerate(reqs):  # pad lanes i >= len(reqs) dropped
+                rep = _report_from_multiwalk("tabu_device", r.instance,
+                                             rs[i], "device", wall)
+                results.append(self._result(r, rep, assembled, wall, delta))
+        else:
+            for i, r in enumerate(reqs):
+                cb = (callbacks[i] if callbacks else None) or Callbacks()
+                rep = solve(r.instance, "tabu_multiwalk", walks=r.walks,
+                            budget=r.budget, seed=r.seed, callbacks=cb,
+                            params=self.params)
+                results.append(self._result(r, rep, assembled,
+                                            time.monotonic() - t0, {}))
+        self.n_batches += 1
+        self.n_requests += len(reqs)
+        return results
+
+    def _result(self, req, report, assembled, wall, cache_delta):
+        cut = assembled.cut
+        return RequestResult(request=req, report=report, metrics={
+            "rid": req.rid,
+            "backend": self.config.backend,
+            "cut_reason": cut.reason,
+            "batch_size": len(cut.requests),
+            "padded_to": assembled.padded_to,
+            "queue_wait": cut.cut_at - req.submitted,
+            "assemble_seconds": assembled.assemble_seconds,
+            "solve_seconds": wall,
+            "launch_cache": dict(cache_delta),
+        })

@@ -1,0 +1,316 @@
+"""Asyncio front-end of the scheduling-solve service.
+
+``SolveService`` glues the pieces together: clients ``submit()`` requests
+and ``await result(rid)`` / ``async for ev in stream_incumbents(rid)`` on
+the event loop, while a dedicated dispatch thread runs the continuous
+batching loop — cut (``Batcher``) → assemble (host) → execute (device) —
+with a depth-2 pipeline: the next batch is assembled on the dispatch
+thread while the previous launch runs on the single-lane device executor,
+so host batch prep overlaps device compute.
+
+Anytime incumbents cross threads via ``loop.call_soon_threadsafe`` into a
+per-request ``asyncio.Queue``; final results resolve per-request futures
+the same way.  ``shutdown()`` closes intake and by default drains the
+queue — every accepted request still gets its full-budget answer.
+"""
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import dataclasses
+import threading
+import time
+
+from ..core.tabu import TSParams
+from .batcher import Batcher, BatchPolicy
+from .engine import Engine, EngineConfig, RequestResult, WarmSpec
+from .queue import RequestQueue, ServiceClosed
+
+__all__ = ["SolveService"]
+
+_SENTINEL = object()
+
+
+class _StreamCallback:
+    """Bridges one request's sync-boundary events from the solver thread
+    into its asyncio stream.  Never stops the search (returns ``None``)."""
+
+    on_iteration = None
+
+    def __init__(self, post, rid: int):
+        self._post = post
+        self._rid = rid
+
+    def on_improvement(self, event):
+        self._post(self._rid, event)
+        return None
+
+
+class SolveService:
+    """Streaming solve server with continuous bucket batching.
+
+    >>> service = await SolveService(warm=[WarmSpec(inst, 2, budget)]).start()
+    >>> rid = await service.submit(inst, budget, seed=3)
+    >>> async for ev in service.stream_incumbents(rid): ...
+    >>> report = (await service.result(rid)).report
+    >>> await service.shutdown()
+    """
+
+    def __init__(self, *, config: "EngineConfig | None" = None,
+                 policy: "BatchPolicy | None" = None,
+                 params: "TSParams | None" = None,
+                 warm: "tuple | list" = (),
+                 clock=time.monotonic):
+        self.engine = Engine(config or EngineConfig(), params=params)
+        pol = policy or BatchPolicy()
+        if self.engine.config.backend == "device":
+            pol = dataclasses.replace(
+                pol, max_batch=min(pol.max_batch,
+                                   max(self.engine.config.batch_sizes)))
+        self.queue = RequestQueue(clock=clock)
+        self.batcher = Batcher(self.queue, pol)
+        self._warm_specs = tuple(warm)
+        self._loop: "asyncio.AbstractEventLoop | None" = None
+        self._thread: "threading.Thread | None" = None
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="serve-solve")
+        self._lock = threading.Lock()
+        self._futures: "dict[int, asyncio.Future]" = {}
+        self._streams: "dict[int, asyncio.Queue]" = {}
+        self._stream_cbs: "dict[int, _StreamCallback]" = {}
+        self._done: "dict[int, RequestResult]" = {}
+        self._failed: "dict[int, BaseException]" = {}
+        self._completed = 0
+        self._errors: "list[str]" = []
+
+    # -- lifecycle ---------------------------------------------------------
+    async def start(self) -> "SolveService":
+        """Warm the compile pool (on the solve lane, before any traffic)
+        and start the dispatch thread."""
+        self._loop = asyncio.get_running_loop()
+        if self._warm_specs:
+            await self._loop.run_in_executor(
+                self._pool, self.engine.warmup, self._warm_specs)
+        self._thread = threading.Thread(target=self._run,
+                                        name="serve-dispatch", daemon=True)
+        self._thread.start()
+        return self
+
+    async def shutdown(self, *, drain: bool = True) -> None:
+        """Close intake.  ``drain=True`` (default) finishes every queued
+        request before returning; ``drain=False`` fails queued-but-unstarted
+        requests with :class:`ServiceClosed`."""
+        self.queue.close()
+        if not drain:
+            for sig, reqs in self.queue.groups().items():
+                for r in self.queue.take(sig, len(reqs)):
+                    exc = ServiceClosed("request dropped at shutdown")
+                    with self._lock:
+                        fut = self._futures.pop(r.rid, None)
+                        q = self._streams.pop(r.rid, None)
+                        self._stream_cbs.pop(r.rid, None)
+                        self._failed[r.rid] = exc
+                    if fut is not None and not fut.done():
+                        fut.set_exception(exc)
+                    if q is not None:
+                        q.put_nowait(_SENTINEL)
+        if self._thread is not None:
+            await self._loop.run_in_executor(None, self._thread.join)
+            self._thread = None
+        self._pool.shutdown(wait=True)
+
+    # -- client surface ----------------------------------------------------
+    async def submit(self, instance, budget=None, *, seed: int = 0,
+                     walks: int = 2, deadline: "float | None" = None) -> int:
+        """Enqueue one solve; returns its request id.  Result plumbing is
+        registered before the dispatch thread can see the request, so a
+        fast solve can never race its own bookkeeping."""
+        req = self.queue.make_request(instance, budget, seed=seed,
+                                      walks=walks, deadline=deadline)
+        fut = self._loop.create_future()
+        with self._lock:
+            self._futures[req.rid] = fut
+            self._streams[req.rid] = asyncio.Queue()
+            self._stream_cbs[req.rid] = _StreamCallback(self._post_event,
+                                                        req.rid)
+        try:
+            self.queue.put(req)
+        except ServiceClosed:
+            with self._lock:
+                self._futures.pop(req.rid, None)
+                self._streams.pop(req.rid, None)
+                self._stream_cbs.pop(req.rid, None)
+            raise
+        return req.rid
+
+    async def result(self, rid: int) -> RequestResult:
+        """The final, solo-identical result of request ``rid``."""
+        with self._lock:
+            fut = self._futures.get(rid)
+            if fut is None:
+                rr = self._done.get(rid)
+                if rr is not None:
+                    return rr
+                exc = self._failed.get(rid)
+                if exc is not None:
+                    raise exc
+                raise KeyError(f"unknown request id {rid}")
+        return await fut
+
+    async def stream_incumbents(self, rid: int):
+        """Async-iterate anytime incumbent :class:`TSEvent`s for one
+        request; ends when its final result lands.  (After completion this
+        yields nothing — use :meth:`result`.)"""
+        with self._lock:
+            q = self._streams.get(rid)
+        if q is None:
+            return
+        while True:
+            item = await q.get()
+            if item is _SENTINEL:
+                return
+            yield item
+
+    def metrics(self) -> dict:
+        """Service-level counters plus the engine's launch-cache view."""
+        with self._lock:
+            lat = sorted(rr.metrics["latency"] for rr in self._done.values())
+            errors = list(self._errors)
+        info = {
+            "submitted": self.queue.n_submitted,
+            "completed": self._completed,
+            "pending": len(self.queue),
+            "batches": self.engine.n_batches,
+            "mean_batch_size": (self.engine.n_requests
+                                / max(1, self.engine.n_batches)),
+            "cuts_by_reason": dict(self.batcher.cuts_by_reason),
+            "warmup": self.engine.warm_info,
+            "errors": errors,
+        }
+        if lat:
+            info["latency_p50"] = lat[len(lat) // 2]
+            info["latency_p99"] = lat[min(len(lat) - 1,
+                                          int(0.99 * len(lat)))]
+        if self.engine.config.backend == "device":
+            from ..core.device_search import launch_cache_info
+
+            info["launch_cache"] = launch_cache_info()
+        return info
+
+    # -- dispatch thread ---------------------------------------------------
+    def _run(self) -> None:
+        inflight = None  # (future, CutBatch) on the single device lane
+        try:
+            while True:
+                if inflight is not None and inflight[0].done():
+                    self._harvest(inflight)
+                    inflight = None
+                cut = self.batcher.cut(device_idle=inflight is None)
+                if cut is not None:
+                    assembled = self.engine.assemble(cut)  # overlaps device
+                    with self._lock:
+                        cbs = [self._stream_cbs.get(r.rid)
+                               for r in cut.requests]
+                    if inflight is not None:
+                        self._harvest(inflight)  # wait for the device lane
+                    inflight = (self._pool.submit(self.engine.execute,
+                                                  assembled, cbs), cut)
+                    continue
+                if self.queue.closed and len(self.queue) == 0:
+                    break
+                if inflight is not None:
+                    try:
+                        inflight[0].result(timeout=0.01)
+                    except concurrent.futures.TimeoutError:
+                        continue
+                    self._harvest(inflight)
+                    inflight = None
+                    continue
+                nxt = self.batcher.next_cut_time()
+                timeout = 0.05 if nxt is None else \
+                    min(0.05, max(0.0, nxt - self.queue.clock()))
+                self.queue.wait_for_work(timeout=timeout)
+        except Exception as e:  # defensive: keep clients unblocked
+            with self._lock:
+                self._errors.append(repr(e))
+            self._fail_all(e)
+            return
+        if inflight is not None:
+            self._harvest(inflight)
+        self._fail_all(ServiceClosed("service shut down"))
+
+    def _harvest(self, inflight) -> None:
+        fut, cut = inflight
+        try:
+            results = fut.result()
+        except Exception as e:
+            # fail only this batch's requests; keep serving the rest
+            with self._lock:
+                self._errors.append(repr(e))
+            for r in cut.requests:
+                with self._lock:
+                    rfut = self._futures.pop(r.rid, None)
+                    q = self._streams.pop(r.rid, None)
+                    self._stream_cbs.pop(r.rid, None)
+                    self._failed[r.rid] = e
+                if self._loop is not None:
+                    if rfut is not None:
+                        self._loop.call_soon_threadsafe(
+                            _set_exception, rfut, e)
+                    if q is not None:
+                        self._loop.call_soon_threadsafe(q.put_nowait,
+                                                        _SENTINEL)
+            return
+        for rr in results:
+            self._finish(rr)
+
+    def _finish(self, rr: RequestResult) -> None:
+        now = self.queue.clock()
+        rr.metrics["latency"] = now - rr.request.submitted
+        if rr.request.deadline is not None:
+            rr.metrics["deadline_met"] = now <= rr.request.deadline
+        with self._lock:
+            fut = self._futures.pop(rr.request.rid, None)
+            q = self._streams.pop(rr.request.rid, None)
+            self._stream_cbs.pop(rr.request.rid, None)
+            self._done[rr.request.rid] = rr
+            self._completed += 1
+        if self._loop is not None and fut is not None:
+            self._loop.call_soon_threadsafe(_resolve, fut, rr, q)
+
+    def _fail_all(self, exc: BaseException) -> None:
+        with self._lock:
+            futs = list(self._futures.values())
+            for rid in self._futures:
+                self._failed[rid] = exc
+            self._futures.clear()
+            qs = list(self._streams.values())
+            self._streams.clear()
+            self._stream_cbs.clear()
+        if self._loop is None:
+            return
+        for f in futs:
+            self._loop.call_soon_threadsafe(_set_exception, f, exc)
+        for q in qs:
+            self._loop.call_soon_threadsafe(q.put_nowait, _SENTINEL)
+
+    def _post_event(self, rid: int, event) -> None:
+        loop = self._loop
+        if loop is None or loop.is_closed():
+            return
+        with self._lock:
+            q = self._streams.get(rid)
+        if q is not None:
+            loop.call_soon_threadsafe(q.put_nowait, event)
+
+
+def _resolve(fut: "asyncio.Future", rr: RequestResult, q) -> None:
+    if not fut.done():
+        fut.set_result(rr)
+    if q is not None:
+        q.put_nowait(_SENTINEL)
+
+
+def _set_exception(fut: "asyncio.Future", exc: BaseException) -> None:
+    if not fut.done():
+        fut.set_exception(exc)

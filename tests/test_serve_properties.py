@@ -1,0 +1,68 @@
+"""Hypothesis property tests for the serve batcher.
+
+Invariants under arbitrary arrival orders, shape classes, and clock steps:
+a cut batch never mixes launch-shape signatures, respects ``max_batch``,
+preserves per-signature FIFO order, and draining loses or duplicates no
+request.  Separate file so tier-1 still collects without ``hypothesis``
+(optional dev dependency, present in CI).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import Budget, random_instance  # noqa: E402
+from repro.serve import Batcher, BatchPolicy, RequestQueue  # noqa: E402
+
+from test_serve import FakeClock  # noqa: E402
+
+# a handful of distinct launch-shape classes (shape class x walks x budget)
+_INSTANCES = [random_instance(s, n_tasks=n, n_data=2 * n)
+              for s, n in ((0, 16), (1, 16), (2, 48))]
+_BUDGETS = [Budget(max_iters=2), Budget(max_iters=5)]
+
+arrival = st.tuples(st.integers(0, len(_INSTANCES) - 1),
+                    st.sampled_from([1, 2, 4]),
+                    st.integers(0, len(_BUDGETS) - 1),
+                    st.floats(0.0, 0.2))
+
+
+@settings(max_examples=25, deadline=None)
+@given(arrivals=st.lists(arrival, min_size=1, max_size=24),
+       max_batch=st.integers(1, 6),
+       max_wait=st.floats(0.0, 0.5))
+def test_cuts_partition_requests_without_mixing_signatures(
+        arrivals, max_batch, max_wait):
+    clk = FakeClock()
+    queue = RequestQueue(clock=clk)
+    batcher = Batcher(queue, BatchPolicy(max_batch=max_batch,
+                                         max_wait=max_wait,
+                                         deadline_slack=0.25))
+    submitted = []
+    cuts = []
+    for inst_i, walks, budget_i, dt in arrivals:
+        clk.advance(dt)
+        submitted.append(queue.submit(_INSTANCES[inst_i],
+                                      _BUDGETS[budget_i], walks=walks,
+                                      seed=len(submitted)))
+        cut = batcher.cut()  # interleave cutting with arrivals
+        if cut is not None:
+            cuts.append(cut)
+    queue.close()  # drain whatever is left
+    while True:
+        cut = batcher.cut()
+        if cut is None:
+            break
+        cuts.append(cut)
+
+    assert len(queue) == 0
+    for cut in cuts:
+        # never mixes launch-shape classes, never exceeds max_batch
+        assert len(cut) <= max_batch
+        assert all(r.signature == cut.signature for r in cut.requests)
+        # per-signature FIFO: rids within a cut are increasing
+        rids = [r.rid for r in cut.requests]
+        assert rids == sorted(rids)
+    # no request lost, none duplicated
+    served = [r.rid for cut in cuts for r in cut.requests]
+    assert sorted(served) == [r.rid for r in submitted]
