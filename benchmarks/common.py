@@ -50,6 +50,38 @@ def append_history(bench: str, gates: dict, **extra) -> str:
     return HISTORY_PATH
 
 
+def certify_incumbents(entries, where: str, *,
+                       enforce_capacity: bool = True) -> bool:
+    """Post-hoc ILP certification of bench incumbents (DESIGN.md §12).
+
+    Runs OUTSIDE every timed section so sanitize mode cannot perturb the
+    gated throughput/latency numbers.  ``entries`` is an iterable of
+    ``(instance, solution, reported_makespan)`` or
+    ``(instance, solution, reported_makespan, claimed_feasible)`` — the
+    4th element threads a report's honest feasibility claim so a
+    memory-tight instance whose best incumbent is (declaredly) capacity
+    infeasible certifies as consistent rather than rejecting.  Returns
+    ``True`` (for the gate record's ``certified`` field) after every
+    incumbent certifies, ``False`` without checking when sanitize mode is
+    off, and raises ``SanitizeError`` on the first bad certificate.
+    ``enforce_capacity=False`` records capacity breaches without
+    rejecting — for lanes that run with memory updates disabled
+    (``MEM_UPDATE_DISABLED``), where incumbents are legitimately
+    pre-Alg-3 (DESIGN §12).
+    """
+    from repro.analysis.sanitize import maybe_sanitize, sanitize_enabled
+
+    if not sanitize_enabled():
+        return False
+    for entry in entries:
+        inst, sol, mk = entry[:3]
+        feas = entry[3] if len(entry) > 3 else None
+        maybe_sanitize(inst, sol, where=where, flag=True,
+                       reported_makespan=mk, claimed_feasible=feas,
+                       enforce_capacity=enforce_capacity)
+    return True
+
+
 @dataclasses.dataclass(frozen=True)
 class Scale:
     n_tasks: tuple[int, int]

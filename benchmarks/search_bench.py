@@ -48,7 +48,7 @@ from repro.core import TSParams, random_instance, solve
 from repro.core.greedy import STRATEGIES, construct_greedy
 from repro.core.tabu import tabu_multiwalk, tabu_search
 
-from .common import append_history, emit, save_json
+from .common import append_history, certify_incumbents, emit, save_json
 
 
 def throughput_params(max_iters: int, seed: int) -> TSParams:
@@ -142,6 +142,13 @@ def numpy_lane(inst, args, n_tasks, n_data, iters, eq_evals, eq_unimproved):
     emit("search_equal_evals", 0.0,
          f"W=8 {multi.makespan:.0f} vs W=1 {single.makespan:.0f} "
          f"under max_evals={eq_evals}")
+    # post-hoc (untimed) certificate check on every lane incumbent
+    payload["certified"] = certify_incumbents(
+        [(inst, base_res.best, base_res.best_makespan),
+         (inst, eng_rep.solution, eng_rep.makespan, eng_rep.feasible),
+         (inst, single.solution, single.makespan, single.feasible),
+         (inst, multi.solution, multi.makespan, multi.feasible)],
+        "search_bench numpy lane")
     return payload
 
 
@@ -189,6 +196,8 @@ def suite_lane(args):
                        "launch_cache": rep_dev.launch_cache,
                        "rows": rep_dev.rows},
             "seconds": time.monotonic() - t0,
+            "certified": all(r["certified"]
+                             for r in rep_np.rows + rep_dev.rows),
         }
         mean_ratio = sum(f["mean_ratio"] for f in rep_dev.families.values()) \
             / max(1, len(rep_dev.families))
@@ -309,6 +318,15 @@ def device_lane(args, n_tasks, n_data, iters):
     # fused while_loop and the Pallas sweep target TPU/GPU; on CPU the XLA
     # gather lowering measurably loses to NumPy's C fancy indexing, so the
     # ratio is recorded (history.jsonl) but only sanity-floored
+    # this lane runs with mem updates disabled (parity_params), so the
+    # incumbents are pre-Alg-3: every constraint except capacity rejects
+    payload["certified"] = certify_incumbents(
+        [(inst, legacy.best, legacy.best_makespan),
+         (inst, np_res.best, np_res.best_makespan),
+         (inst, dev_warm.best, float(dev_warm.best_makespan))]
+        + [(ri, r.best, float(r.best_makespan))
+           for ri, r in zip(row, row_res)],
+        "search_bench device lane", enforce_capacity=False)
     gate = 2.0 if platform != "cpu" else 0.1
     payload["throughput_gate"] = gate
     if not args.smoke and ratio < gate:
@@ -359,6 +377,8 @@ def main(argv=None) -> dict:
             ratios = [f["mean_ratio"]
                       for f in lane["device"]["families"].values()]
             gates[f"{name}_mean_ratio"] = sum(ratios) / max(1, len(ratios))
+        gates["certified"] = all(
+            s["certified"] for s in payload["suite_lane"]["suites"].values())
         append_history("search_bench_suite", gates, scale=payload["scale"])
         print(f"wrote {path}  (suite sweep: "
               + ", ".join(payload["suite_lane"]["suites"]) + ")")
@@ -377,6 +397,7 @@ def main(argv=None) -> dict:
             # should show this dropping toward zero (persistent cache hit)
             "compile_seconds": lane["device"]["compile_seconds"],
             "compile_cache": compile_cache_on,
+            "certified": lane["certified"],
         }, scale=payload["scale"])
         print(f"wrote {path}  (device {lane['throughput_ratio']:.2f}x numpy, "
               f"parity={lane['w1_parity']})")
@@ -390,6 +411,7 @@ def main(argv=None) -> dict:
         "speedup": payload["speedup"],
         "w1_parity": payload["w1_parity"],
         "multi_le_single": payload["equal_evals"]["multi_le_single"],
+        "certified": payload["certified"],
     }, scale=payload["scale"])
     print(f"wrote {path}  (iteration-throughput speedup: "
           f"{payload['speedup']:.1f}x, w1_parity={payload['w1_parity']})")

@@ -56,7 +56,7 @@ from repro.serve import (
     launch_signature,
 )
 
-from .common import append_history, emit, save_json
+from .common import append_history, certify_incumbents, emit, save_json
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,6 +238,14 @@ def lane(items, arrivals, prof, params, backend, cache_dir):
         "throughput_ratio_vs_cold": (n / wall) / (n / t_cold),
         "parity": all(parity),
         "parity_per_request": parity,
+        # post-hoc (untimed) certificate check on every served incumbent;
+        # the engine additionally certifies inline when sanitize mode is on
+        # (rr.metrics["certified"]) — this field gates the bench record
+        "certified": certify_incumbents(
+            [(item["instance"], rr.report.solution, rr.report.makespan,
+              rr.report.feasible)
+             for item, rr in zip(items, served)],
+            f"serve bench {backend} lane"),
     }
     emit(f"serve_{backend}_p50", payload["served"]["latency_p50"] * 1e6,
          f"p99 {payload['served']['latency_p99']*1e3:.0f}ms, "
@@ -289,6 +297,7 @@ def main(argv=None) -> dict:
         gates[f"{backend}_solved_per_s"] = ln["served"]["solved_per_s"]
         gates[f"{backend}_warmup_compile_seconds"] = \
             ln["served"]["warmup_compile_seconds"]
+        gates[f"{backend}_certified"] = ln["certified"]
     append_history("serve", gates, profile=payload["profile"])
     print(f"wrote {path}")
 

@@ -1,0 +1,230 @@
+"""Shared AST machinery for the lint rules.
+
+Traced-function discovery + a forward taint analysis over function
+parameters: inside a jitted/traced function, the parameters are tracers,
+and any local assigned from a tracer expression is a tracer too.  Static
+metadata (``x.shape`` / ``x.dtype`` / ``x.ndim`` / ``len(x)`` /
+``isinstance(...)``) does *not* propagate taint — branching on shapes at
+trace time is legitimate and must not be flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+#: callables whose function-valued arguments are traced by JAX
+TRACE_ENTRYPOINTS = {
+    "jit",
+    "vmap",
+    "pmap",
+    "grad",
+    "value_and_grad",
+    "while_loop",
+    "scan",
+    "cond",
+    "switch",
+    "fori_loop",
+    "pallas_call",
+    "shard_map",
+    "checkpoint",
+    "remat",
+}
+
+#: attribute reads on a tracer that are static python values at trace time
+STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "aval", "weak_type"}
+
+#: builtins whose result on a tracer is static (or which never leak)
+STATIC_CALLS = {"len", "isinstance", "type", "getattr", "hasattr", "range"}
+
+
+def dotted(node: "ast.AST") -> "str | None":
+    """``jax.lax.while_loop`` → the dotted string, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_segment(node: "ast.AST") -> "str | None":
+    d = dotted(node)
+    return d.rsplit(".", 1)[-1] if d else None
+
+
+def is_jit_decorator(dec: "ast.AST") -> bool:
+    """@jit / @jax.jit / @partial(jax.jit, ...) / @jax.jit(...) forms."""
+    if last_segment(dec) == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        seg = last_segment(dec.func)
+        if seg == "jit":
+            return True
+        if seg == "partial":
+            return any(last_segment(a) == "jit" for a in dec.args)
+    return False
+
+
+def static_params(fn: "ast.AST") -> "set[str]":
+    """Parameter names that jit treats as static (not tracers): literal
+    ``static_argnames`` strings and ``static_argnums`` positions from any
+    jit decorator (bare or wrapped in ``partial``)."""
+    names: set[str] = set()
+    nums: set[int] = set()
+    for dec in getattr(fn, "decorator_list", ()):
+        if not (isinstance(dec, ast.Call) and is_jit_decorator(dec)):
+            continue
+        for kw in dec.keywords:
+            if kw.arg not in ("static_argnums", "static_argnames"):
+                continue
+            vals = (
+                kw.value.elts
+                if isinstance(kw.value, (ast.Tuple, ast.List))
+                else [kw.value]
+            )
+            for el in vals:
+                if isinstance(el, ast.Constant):
+                    if isinstance(el.value, str):
+                        names.add(el.value)
+                    elif isinstance(el.value, int):
+                        nums.add(el.value)
+    if nums:
+        pos = [a.arg for a in (*fn.args.posonlyargs, *fn.args.args)]
+        offset = 1 if pos and pos[0] in ("self", "cls") else 0
+        for i in nums:
+            if 0 <= i + offset < len(pos):
+                names.add(pos[i + offset])
+    return names
+
+
+def function_defs(tree: "ast.AST") -> "dict[str, list[ast.AST]]":
+    funcs: dict[str, list[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            funcs.setdefault(node.name, []).append(node)
+    return funcs
+
+
+def traced_functions(tree: "ast.AST") -> "list[ast.AST]":
+    """Every FunctionDef that JAX traces: @jit-decorated, passed by name
+    into a trace entrypoint (``jax.jit(f)``, ``lax.while_loop(cond, body,
+    ...)``), or nested inside an already-traced function (closures are
+    traced with their parent)."""
+    funcs = function_defs(tree)
+    traced: list[ast.AST] = []
+    seen: set[int] = set()
+
+    def add(n):
+        if id(n) not in seen:
+            seen.add(id(n))
+            traced.append(n)
+
+    for nodes in funcs.values():
+        for n in nodes:
+            if any(is_jit_decorator(d) for d in n.decorator_list):
+                add(n)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and last_segment(node.func) in TRACE_ENTRYPOINTS:
+            for a in node.args:
+                if isinstance(a, ast.Name) and a.id in funcs:
+                    for n in funcs[a.id]:
+                        add(n)
+    # closure: defs nested in traced fns trace with the parent
+    frontier = list(traced)
+    while frontier:
+        parent = frontier.pop()
+        for sub in ast.walk(parent):
+            if (
+                isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and sub is not parent
+                and id(sub) not in seen
+            ):
+                add(sub)
+                frontier.append(sub)
+    return traced
+
+
+def param_names(fn: "ast.AST") -> "set[str]":
+    a = fn.args
+    names = {arg.arg for arg in (*a.posonlyargs, *a.args, *a.kwonlyargs)}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    names -= {"self", "cls"}
+    return names
+
+
+def tracer_refs(expr: "ast.AST", tainted: "set[str]") -> "list[ast.Name]":
+    """Name loads in ``expr`` that reference a tainted (tracer) value,
+    excluding static-metadata accesses and static builtins."""
+    refs: list[ast.Name] = []
+
+    def visit(node):
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            return
+        if isinstance(node, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops
+        ) and all(
+            isinstance(c, ast.Constant) and c.value is None for c in node.comparators
+        ):
+            # `x is None` is a static structure check, not a tracer read
+            return
+        if isinstance(node, ast.Call):
+            seg = last_segment(node.func)
+            if seg in STATIC_CALLS:
+                return
+            visit(node.func)
+            for child in (*node.args, *node.keywords):
+                visit(child.value if isinstance(child, ast.keyword) else child)
+            return
+        if isinstance(node, ast.Name):
+            if node.id in tainted and isinstance(node.ctx, ast.Load):
+                refs.append(node)
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return refs
+
+
+def _target_names(tgt: "ast.AST"):
+    # only names actually being bound — `self.x = v` binds the attribute,
+    # not `self` (whose Name node is a Load inside the target)
+    for n in ast.walk(tgt):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+            yield n.id
+
+
+def tainted_names(fn: "ast.AST", seeds: "set[str] | None" = None) -> "set[str]":
+    """Forward taint closure: non-static params (plus ``seeds``) and
+    everything assigned from them, through the whole function including
+    nested defs."""
+    tainted = (param_names(fn) - static_params(fn)) | (seeds or set())
+    for sub in ast.walk(fn):
+        if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) and sub is not fn:
+            tainted |= param_names(sub)
+    for _ in range(4):  # fixpoint for straight-line reassignment chains
+        before = len(tainted)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and tracer_refs(node.value, tainted):
+                for tgt in node.targets:
+                    tainted.update(_target_names(tgt))
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                if tracer_refs(node.value, tainted):
+                    tainted.update(_target_names(node.target))
+            elif isinstance(node, ast.AugAssign):
+                if tracer_refs(node.value, tainted):
+                    tainted.update(_target_names(node.target))
+            elif isinstance(node, ast.For):
+                if tracer_refs(node.iter, tainted):
+                    tainted.update(_target_names(node.target))
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)):
+                for gen in node.generators:
+                    if tracer_refs(gen.iter, tainted):
+                        tainted.update(_target_names(gen.target))
+        if len(tainted) == before:
+            break
+    return tainted

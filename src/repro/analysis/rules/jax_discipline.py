@@ -1,0 +1,422 @@
+"""Lint rules for the JAX tracing discipline (DESIGN.md §§7–9).
+
+RPR101 tracer-leak      — Python ``if``/``while``/``assert`` on a traced
+                          value inside a jitted/traced function.
+RPR102 host-sync        — ``float()``/``int()``/``bool()``/``.item()``/
+                          ``.tolist()``/``np.asarray()`` on a traced value
+                          inside a traced function: forces a device→host
+                          sync (or a ConcretizationError) in the hot loop.
+RPR103 cumsum-parity    — ``jnp.cumsum`` in a parity-critical module.
+                          DESIGN §9: jnp's parallel prefix scan is not
+                          bit-equal to np.cumsum's sequential sum; the
+                          blocked sequential scan must be used instead.
+RPR104 cache-key-cover  — a compiled-function cache (``.get``/``.put`` on
+                          a *cache/launch/fns*-named holder with a local
+                          tuple key) whose enclosing function has a
+                          parameter that neither feeds the key (directly
+                          or through local assignments) nor is passed to
+                          the cached function at call time.  This is the
+                          PR-6 silent-retrace bug class: a shape-affecting
+                          argument missing from the key silently bakes
+                          into the compiled program.
+RPR105 donate-rebind    — calling a function jitted with
+                          ``donate_argnums`` without rebinding the donated
+                          argument from the result: the donor buffer is
+                          invalidated by XLA and any later read is
+                          undefined (DESIGN §9 state threading).
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from . import Finding, Rule
+from ._shared import (
+    dotted,
+    last_segment,
+    param_names,
+    tainted_names,
+    traced_functions,
+    tracer_refs,
+)
+
+PARITY_MODULES = {
+    "core/eval_batch.py",
+    "core/device_search.py",
+    "core/tabu.py",
+    "core/memory_update.py",
+    "core/solution.py",
+    "kernels/schedule_dp.py",
+}
+
+_CACHE_HOLDER = re.compile(r"(?i)(cache|launch|lru|fns)")
+_HOST_SYNC_BUILTINS = {"float", "int", "bool", "complex"}
+_HOST_SYNC_METHODS = {"item", "tolist"}
+_NUMPY_SYNC = {"asarray", "array", "copy"}
+
+
+def _src_modules(modpath: str) -> bool:
+    return modpath.endswith(".py")
+
+
+def _check_tracer_leak(tree: ast.AST, modpath: str) -> "list[Finding]":
+    out: list[Finding] = []
+    seen: set[tuple[int, int]] = set()
+    for fn in traced_functions(tree):
+        tainted = tainted_names(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While, ast.Assert)):
+                refs = tracer_refs(node.test, tainted)
+                if refs and (node.lineno, node.col_offset) not in seen:
+                    seen.add((node.lineno, node.col_offset))
+                    kind = type(node).__name__.lower()
+                    out.append(
+                        Finding(
+                            "RPR101",
+                            modpath,
+                            node.lineno,
+                            node.col_offset,
+                            f"python `{kind}` on traced value "
+                            f"`{refs[0].id}` inside traced function "
+                            f"`{getattr(fn, 'name', '<lambda>')}` — use lax.cond/"
+                            "lax.while_loop/jnp.where (DESIGN §7)",
+                        )
+                    )
+    return out
+
+
+def _check_host_sync(tree: ast.AST, modpath: str) -> "list[Finding]":
+    out: list[Finding] = []
+    seen: set[tuple[int, int]] = set()
+    for fn in traced_functions(tree):
+        tainted = tainted_names(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            hit = None
+            seg = last_segment(node.func)
+            if (
+                isinstance(node.func, ast.Name)
+                and node.func.id in _HOST_SYNC_BUILTINS
+                and any(tracer_refs(a, tainted) for a in node.args)
+            ):
+                hit = f"{node.func.id}()"
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in _HOST_SYNC_METHODS
+                and tracer_refs(node.func.value, tainted)
+            ):
+                hit = f".{node.func.attr}()"
+            elif seg in _NUMPY_SYNC and isinstance(node.func, ast.Attribute):
+                base = dotted(node.func.value)
+                if base in ("np", "numpy", "onp") and any(
+                    tracer_refs(a, tainted) for a in node.args
+                ):
+                    hit = f"{base}.{seg}()"
+            if hit and (node.lineno, node.col_offset) not in seen:
+                seen.add((node.lineno, node.col_offset))
+                out.append(
+                    Finding(
+                        "RPR102",
+                        modpath,
+                        node.lineno,
+                        node.col_offset,
+                        f"{hit} on traced value inside traced function "
+                        f"`{getattr(fn, 'name', '<lambda>')}` forces a host "
+                        "sync / concretization (DESIGN §8: sync only at the "
+                        "documented sync_every boundaries)",
+                    )
+                )
+    return out
+
+
+def _check_cumsum(tree: ast.AST, modpath: str) -> "list[Finding]":
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "cumsum":
+            base = dotted(node.value)
+            if base in ("jnp", "jax.numpy"):
+                out.append(
+                    Finding(
+                        "RPR103",
+                        modpath,
+                        node.lineno,
+                        node.col_offset,
+                        "jnp.cumsum in a parity-critical module: its parallel "
+                        "prefix scan is not bit-equal to np.cumsum's sequential "
+                        "sum — use the blocked sequential scan (DESIGN §9)",
+                    )
+                )
+    return out
+
+
+def _assign_sources(fn: ast.AST) -> "dict[str, set[str]]":
+    """name → names its assignments read (one level; closed over by caller)."""
+    src: dict[str, set[str]] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            reads = {n.id for n in ast.walk(node.value) if isinstance(n, ast.Name)}
+            for tgt in node.targets:
+                for t in ast.walk(tgt):
+                    if isinstance(t, ast.Name):
+                        src.setdefault(t.id, set()).update(reads)
+        elif isinstance(node, ast.AugAssign) and isinstance(node.target, ast.Name):
+            reads = {n.id for n in ast.walk(node.value) if isinstance(n, ast.Name)}
+            src.setdefault(node.target.id, set()).update(reads)
+    return src
+
+
+def _closure(names: "set[str]", src: "dict[str, set[str]]") -> "set[str]":
+    out = set(names)
+    frontier = list(names)
+    while frontier:
+        n = frontier.pop()
+        for dep in src.get(n, ()):
+            if dep not in out:
+                out.add(dep)
+                frontier.append(dep)
+    return out
+
+
+def _check_cache_keys(tree: ast.AST, modpath: str) -> "list[Finding]":
+    out: list[Finding] = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # find `<holder>.get(K)` / `<holder>.put(K, ...)` on a cache-named holder
+        gets: list[ast.Call] = []
+        puts: list[ast.Call] = []
+        for node in ast.walk(fn):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("get", "put")
+                and node.args
+                and isinstance(node.args[0], ast.Name)
+            ):
+                holder = dotted(node.func.value)
+                if holder and _CACHE_HOLDER.search(holder.rsplit(".", 1)[-1]):
+                    (gets if node.func.attr == "get" else puts).append(node)
+        if not gets or not puts:
+            continue
+        get = gets[0]
+        key_name = get.args[0].id
+        # the key must be a local tuple literal for the rule to reason about
+        key_tuple = None
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == key_name for t in node.targets
+            ):
+                if isinstance(node.value, ast.Tuple):
+                    key_tuple = node.value
+        if key_tuple is None:
+            continue
+        src = _assign_sources(fn)
+        key_reads = {n.id for n in ast.walk(key_tuple) if isinstance(n, ast.Name)}
+        covered = _closure(key_reads, src)
+        # names the cached function is *called* with are runtime arguments
+        fn_names = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and node.value in gets:
+                for t in node.targets:
+                    for tn in ast.walk(t):
+                        if isinstance(tn, ast.Name):
+                            fn_names.add(tn.id)
+        runtime: set[str] = set()
+        for node in ast.walk(fn):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id in fn_names
+            ):
+                for a in (*node.args, *(kw.value for kw in node.keywords)):
+                    runtime.update(
+                        n.id for n in ast.walk(a) if isinstance(n, ast.Name)
+                    )
+        holder_root = dotted(gets[0].func.value)
+        holder_root = holder_root.split(".", 1)[0] if holder_root else ""
+        for p in sorted(param_names(fn) - {holder_root}):
+            if p in covered or p in runtime:
+                continue
+            out.append(
+                Finding(
+                    "RPR104",
+                    modpath,
+                    get.lineno,
+                    get.col_offset,
+                    f"compiled-fn cache key `{key_name}` in `{fn.name}` does "
+                    f"not cover parameter `{p}` (neither in the key nor passed "
+                    "to the cached function) — a shape/behavior-affecting arg "
+                    "missing from the key bakes silently into the compiled "
+                    "program (DESIGN §11, PR-6 retrace bug)",
+                )
+            )
+    return out
+
+
+def _donated_positions(call: ast.Call) -> "set[int]":
+    """Literal donate_argnums positions of a jax.jit(...) call (IfExp arms
+    included — a conditionally-donated arg must still be threaded)."""
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        vals = [kw.value]
+        if isinstance(kw.value, ast.IfExp):
+            vals = [kw.value.body, kw.value.orelse]
+        pos: set[int] = set()
+        for v in vals:
+            if isinstance(v, (ast.Tuple, ast.List)):
+                for el in v.elts:
+                    if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                        pos.add(el.value)
+            elif isinstance(v, ast.Constant) and isinstance(v.value, int):
+                pos.add(v.value)
+        return pos
+    return set()
+
+
+def _check_donate(tree: ast.AST, modpath: str) -> "list[Finding]":
+    out: list[Finding] = []
+    # pass 1: names assigned from jax.jit(..., donate_argnums=...) per function,
+    # plus module functions that *return* such a name (with its tuple index)
+    makers: dict[str, tuple[set[int], int]] = {}  # func name -> (positions, ret idx)
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        donated: dict[str, set[int]] = {}
+        for node in ast.walk(fn):
+            if (
+                isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)
+                and last_segment(node.value.func) == "jit"
+            ):
+                pos = _donated_positions(node.value)
+                if pos:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            donated[t.id] = pos
+        if not donated:
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Return) and node.value is not None:
+                vals = (
+                    node.value.elts
+                    if isinstance(node.value, ast.Tuple)
+                    else [node.value]
+                )
+                for i, v in enumerate(vals):
+                    if isinstance(v, ast.Name) and v.id in donated:
+                        makers[fn.name] = (donated[v.id], i)
+        out += _donate_call_findings(fn, donated, modpath)
+    # pass 2: call sites that bind a maker's returned jitted fn
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        bound: dict[str, set[int]] = {}
+        for node in ast.walk(fn):
+            if (
+                isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)
+                and isinstance(node.value.func, ast.Name)
+                and node.value.func.id in makers
+            ):
+                pos, idx = makers[node.value.func.id]
+                for t in node.targets:
+                    tgts = t.elts if isinstance(t, ast.Tuple) else [t]
+                    if idx < len(tgts) and isinstance(tgts[idx], ast.Name):
+                        bound[tgts[idx].id] = pos
+        if bound:
+            out += _donate_call_findings(fn, bound, modpath)
+    return out
+
+
+def _donate_call_findings(
+    fn: ast.AST, donated: "dict[str, set[int]]", modpath: str
+) -> "list[Finding]":
+    out: list[Finding] = []
+    stmts = list(ast.walk(fn))
+    for node in stmts:
+        if not (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in donated
+        ):
+            continue
+        # which assignment (if any) consumes the call result?
+        rebind: set[str] = set()
+        for a in stmts:
+            if isinstance(a, ast.Assign) and a.value is node:
+                for t in a.targets:
+                    for tn in ast.walk(t):
+                        if isinstance(tn, ast.Name):
+                            rebind.add(tn.id)
+        for pos in donated[node.func.id]:
+            if pos >= len(node.args):
+                continue
+            arg = node.args[pos]
+            if not isinstance(arg, ast.Name):
+                continue  # temporaries can't be read after donation
+            if arg.id in rebind:
+                continue
+            # donated name never rebound: any later read sees a freed buffer
+            later_read = any(
+                isinstance(n, ast.Name)
+                and n.id == arg.id
+                and isinstance(n.ctx, ast.Load)
+                and n.lineno > node.lineno
+                for n in stmts
+            )
+            if later_read:
+                out.append(
+                    Finding(
+                        "RPR105",
+                        modpath,
+                        node.lineno,
+                        node.col_offset,
+                        f"`{arg.id}` is donated (donate_argnums includes "
+                        f"position {pos}) in this call but is read again "
+                        "afterwards without being rebound from the result — "
+                        "the donor buffer is invalidated by XLA (DESIGN §9 "
+                        "state threading)",
+                    )
+                )
+    return out
+
+
+RULES = [
+    Rule(
+        "RPR101",
+        "tracer-leak",
+        "python if/while/assert on a traced value inside a jitted fn",
+        _src_modules,
+        _check_tracer_leak,
+    ),
+    Rule(
+        "RPR102",
+        "host-sync",
+        "float()/.item()/np.asarray on a traced value inside a jitted fn",
+        _src_modules,
+        _check_host_sync,
+    ),
+    Rule(
+        "RPR103",
+        "cumsum-parity",
+        "jnp.cumsum in a parity-critical module (DESIGN §9)",
+        lambda p: p in PARITY_MODULES,
+        _check_cumsum,
+    ),
+    Rule(
+        "RPR104",
+        "cache-key-coverage",
+        "compiled-fn cache key missing an enclosing-fn parameter",
+        _src_modules,
+        _check_cache_keys,
+    ),
+    Rule(
+        "RPR105",
+        "donate-rebind",
+        "donated jit argument read after the call without rebinding",
+        _src_modules,
+        _check_donate,
+    ),
+]

@@ -21,6 +21,7 @@ schedulers in arXiv:2507.17411).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, Protocol, Union
 
@@ -210,6 +211,27 @@ def solve(
 # --------------------------------------------------------------------------- #
 # adapters for the paper's solvers                                             #
 # --------------------------------------------------------------------------- #
+def _sanitize_report(inst: Instance, report: SolveReport) -> SolveReport:
+    """REPRO_SANITIZE boundary: certify every outgoing report against the
+    ILP constraints (DESIGN.md §12).  The env check precedes the import so
+    ``repro.analysis`` stays off the hot path when the mode is off."""
+    if os.environ.get("REPRO_SANITIZE", "").strip().lower() in ("", "0", "false", "no", "off"):
+        return report
+    from ..analysis.sanitize import maybe_sanitize
+
+    cert = maybe_sanitize(
+        inst,
+        report.solution,
+        where=f"solve report ({report.method})",
+        flag=True,
+        reported_makespan=report.makespan,
+        claimed_feasible=report.feasible,
+    )
+    if cert is not None:
+        report.extras["certified"] = True
+    return report
+
+
 def _report_from_solution(
     method: str,
     inst: Instance,
@@ -222,7 +244,7 @@ def _report_from_solution(
     sched = exact_schedule(inst, sol)
     assert sched is not None, f"{method} produced a cyclic schedule"
     mk = sched.makespan
-    return SolveReport(
+    return _sanitize_report(inst, SolveReport(
         method=method,
         solution=sol,
         makespan=mk,
@@ -234,7 +256,7 @@ def _report_from_solution(
         wall_time=wall_time,
         history=[(0, mk)],
         extras=extras or {},
-    )
+    ))
 
 
 def _make_greedy_solver(strategy: str) -> Solver:
@@ -354,7 +376,7 @@ def _solve_tabu(
     )
     sched = exact_schedule(inst, res.best)
     assert sched is not None
-    return SolveReport(
+    return _sanitize_report(inst, SolveReport(
         method="tabu",
         solution=res.best,
         makespan=res.best_makespan,
@@ -368,7 +390,7 @@ def _solve_tabu(
         stop_reason=res.stop_reason,
         extras={"init": init if isinstance(init, str)
                 else ("explicit" if isinstance(init, Solution) else "slack_first")},
-    )
+    ))
 
 
 @register_solver("tabu_multiwalk")
@@ -453,7 +475,7 @@ def _report_from_multiwalk(
     identical to a solo ``solve()`` report."""
     sched = exact_schedule(inst, res.best)
     assert sched is not None
-    extras = {
+    extras: dict = {
         "walks": res.walks,
         "backend": backend,
         "per_walk": [
@@ -467,7 +489,7 @@ def _report_from_multiwalk(
     }
     if hasattr(res, "compile_seconds"):
         extras["compile_seconds"] = res.compile_seconds
-    return SolveReport(
+    return _sanitize_report(inst, SolveReport(
         method=method,
         solution=res.best,
         makespan=res.best_makespan,
@@ -480,7 +502,7 @@ def _report_from_multiwalk(
         history=res.history,
         stop_reason=res.stop_reason,
         extras=extras,
-    )
+    ))
 
 
 @register_solver("tabu_device")
@@ -642,7 +664,7 @@ def _solve_portfolio(
     assert bool(np.all(ev.feasible)), "a portfolio leg produced a cyclic schedule"
     assert np.allclose(ev.makespan, [mk for mk, _, _ in incumbents], rtol=1e-9), \
         "a leg's reported makespan disagrees with its re-evaluated schedule"
-    return SolveReport(
+    return _sanitize_report(inst, SolveReport(
         method="portfolio",
         solution=best_sol,
         makespan=best_mk,
@@ -655,4 +677,4 @@ def _solve_portfolio(
         history=history or [(0, best_mk)],
         stop_reason=stop_reason,
         extras={"per_method": per_method, "winner": best_method},
-    )
+    ))

@@ -60,7 +60,7 @@ from .eval_batch import APPROX_WINDOW, LRUCache
 from .mdfg import Instance
 from .memory_update import memory_update
 from .solution import _EPS, Solution, exact_schedule
-from .tabu import MultiWalkResult, TSEvent, TSParams, WalkInfo
+from .tabu import MultiWalkResult, TSEvent, TSParams, WalkInfo, _maybe_sanitize
 
 __all__ = [
     "DeviceConfig",
@@ -645,6 +645,9 @@ def _round_loop(ia: dict, w_count: int, params: TSParams,
             avail = jnp.maximum(max_evals - cs["n_exact"], 0)
             want = jnp.where(participates & ~done,
                              jnp.minimum(K, n_adm - pos), 0)
+            # lint: allow[RPR103] DESIGN §9: exclusive prefix over small
+            # nonneg ints is exact regardless of scan order; the §9 parity
+            # hazard is float accumulation, which the blocked scan covers
             before = jnp.cumsum(want) - want
             size = jnp.clip(jnp.minimum(want, avail - before), 0, want)
             done = done | (want > 0) & (size <= 0)
@@ -958,7 +961,8 @@ def device_multiwalk(
     params = params or TSParams()
     cfg = config or DeviceConfig()
     w_count = len(inits)
-    assert w_count >= 1, "device_multiwalk needs at least one init"
+    if w_count < 1:
+        raise ValueError("device_multiwalk needs at least one init")
     labels = init_labels or [f"walk{w}" for w in range(w_count)]
     t0 = time.monotonic()
 
@@ -966,7 +970,8 @@ def device_multiwalk(
                               scalar=params.mem_update_scalar)
                 for init in inits]
     scheds = [exact_schedule(inst, s) for s in cur_sols]
-    assert all(s is not None for s in scheds), "initial solutions must be acyclic"
+    if not all(s is not None for s in scheds):
+        raise ValueError("initial solutions must be acyclic")
 
     ip = pack_instance(inst)
     state = pack_state(ip, cur_sols, scheds, params.seed)
@@ -1071,7 +1076,8 @@ def device_multiwalk(
                         inst, sol_w, refresh_every=params.mem_refresh_every,
                         scalar=params.mem_update_scalar)
                     sched_w = exact_schedule(inst, sol_w)
-                    assert sched_w is not None
+                    if sched_w is None:
+                        raise RuntimeError("memory_update returned a cyclic solution")
                     n_exact_host += 1
                     _write_walk(ip, state, w, sol_w, sched_w)
                     if sched_w.makespan < state["best_mk"][w] - 1e-9:
@@ -1081,6 +1087,10 @@ def device_multiwalk(
                         state["best_assign"][w] = state["assign"][w]
                         state["best_mem"][w] = state["mem"][w]
                         histories[w].append((it_now, float(sched_w.makespan)))
+                        _maybe_sanitize(
+                            inst, sol_w,
+                            f"device_multiwalk sync incumbent walk {w}",
+                            params, mk=float(sched_w.makespan))
                         if sched_w.makespan < g_best:
                             g_best = float(sched_w.makespan)
                             g_hist.append((it_now, g_best))
@@ -1097,6 +1107,8 @@ def device_multiwalk(
         # the legacy drivers' feasibility contract
         best_sols, best_mk = _repair_bests(inst, params, best_sols, best_mk)
     gi = int(np.argmin(best_mk))
+    _maybe_sanitize(inst, best_sols[gi], "device_multiwalk final best",
+                    params, mk=float(best_mk[gi]), capacity=mem_updates_on)
     per_walk = [
         WalkInfo(init_label=labels[w], initial_makespan=histories[w][0][1],
                  best_makespan=float(best_mk[w]), best=best_sols[w],
@@ -1220,14 +1232,17 @@ def solve_instances(
         else InstanceBatch.from_instances(instances)
     instances = list(batch.instances)
     n_inst = len(instances)
-    assert n_inst >= 1 and len(inits) == n_inst
+    if n_inst < 1 or len(inits) != n_inst:
+        raise ValueError("need at least one instance and one init list per instance")
     w_count = len(inits[0])
-    assert all(len(x) == w_count for x in inits), "equal walk counts required"
+    if not all(len(x) == w_count for x in inits):
+        raise ValueError("equal walk counts required")
     if seeds is None:
         seeds = [params.seed] * n_inst
-    assert len(seeds) == n_inst, "one seed per instance"
-    if callbacks is not None:
-        assert len(callbacks) == n_inst, "one callback slot per instance"
+    if len(seeds) != n_inst:
+        raise ValueError("one seed per instance")
+    if callbacks is not None and len(callbacks) != n_inst:
+        raise ValueError("one callback slot per instance")
     t0 = time.monotonic()
 
     cur_sols, scheds = [], []
@@ -1236,7 +1251,8 @@ def solve_instances(
                               scalar=params.mem_update_scalar)
                 for s in init_list]
         sc = [exact_schedule(inst, s) for s in sols]
-        assert all(x is not None for x in sc), "initial solutions must be acyclic"
+        if not all(x is not None for x in sc):
+            raise ValueError("initial solutions must be acyclic")
         cur_sols.append(sols)
         scheds.append(sc)
 
@@ -1362,7 +1378,9 @@ def solve_instances(
                             refresh_every=params.mem_refresh_every,
                             scalar=params.mem_update_scalar)
                         sched_w = exact_schedule(instances[i], sol_w)
-                        assert sched_w is not None
+                        if sched_w is None:
+                            raise RuntimeError(
+                                "memory_update returned a cyclic solution")
                         n_exact_host[i] += 1
                         _write_walk(packs[i], sub, w, sol_w, sched_w)
                         if sched_w.makespan < sub["best_mk"][w] - 1e-9:
@@ -1408,6 +1426,10 @@ def solve_instances(
             best_sols, best_mk = _repair_bests(instances[i], params,
                                                best_sols, best_mk)
         gi = int(np.argmin(best_mk))
+        _maybe_sanitize(instances[i], best_sols[gi],
+                        f"solve_instances final best (instance {i})",
+                        params, mk=float(best_mk[gi]),
+                        capacity=mem_updates_on)
         per_walk = [
             WalkInfo(init_label=f"walk{w}",
                      initial_makespan=histories[i][w][0][1],
@@ -1471,7 +1493,8 @@ def warm_launches(
     sols = [memory_update(inst, s, refresh_every=params.mem_refresh_every,
                           scalar=params.mem_update_scalar) for s in init_sols]
     scheds = [exact_schedule(inst, s) for s in sols]
-    assert all(s is not None for s in scheds), "warm instance must be solvable"
+    if not all(s is not None for s in scheds):
+        raise ValueError("warm instance must be solvable")
     before = launch_cache_info()
     per_size: dict = {}
     with enable_x64():
@@ -1480,7 +1503,8 @@ def warm_launches(
         ia = ia_from_pack(ip)
         state = pack_state(ip, sols, scheds, params.seed)
         for bs in sorted({int(b) for b in batch_sizes}):
-            assert bs >= 1, "batch sizes must be positive"
+            if bs < 1:
+                raise ValueError("batch sizes must be positive")
             t0 = time.monotonic()
             launch, fresh = _get_launch(ip, walks, params, cap, cfg, batch=bs)
             if fresh:

@@ -295,7 +295,8 @@ class PackedSolutions:
         slice scatter + link refresh) — the packed ``tabu.apply_move``."""
         assert self.seq is not None
         src = self.seq[i, mv.src_proc]
-        assert src[mv.src_pos] == mv.task
+        if src[mv.src_pos] != mv.task:
+            raise ValueError("move does not match the walk's current sequence")
         src[mv.src_pos:-1] = src[mv.src_pos + 1:].copy()
         src[-1] = -1
         self.seq_len[i, mv.src_proc] -= 1

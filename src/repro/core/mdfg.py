@@ -187,14 +187,20 @@ class Instance:
 
 
 def validate_instance(inst: Instance) -> None:
-    """Sanity checks; raises on malformed instances."""
-    assert inst.proc_time.shape == (inst.n_tasks, inst.n_procs)
-    assert (np.isfinite(inst.proc_time).any(axis=1)).all(), "task with no compatible core"
-    assert inst.data_mem_ok.any(axis=1).all(), "data block with no compatible memory"
-    assert (inst.data_size > 0).all()
-    assert np.isinf(inst.mem_cap).any(), "need an unbounded fallback tier for feasibility"
+    """Sanity checks; raises ValueError on malformed instances."""
+    if inst.proc_time.shape != (inst.n_tasks, inst.n_procs):
+        raise ValueError("proc_time must be (n_tasks, n_procs)")
+    if not (np.isfinite(inst.proc_time).any(axis=1)).all():
+        raise ValueError("task with no compatible core")
+    if not inst.data_mem_ok.any(axis=1).all():
+        raise ValueError("data block with no compatible memory")
+    if not (inst.data_size > 0).all():
+        raise ValueError("data block sizes must be positive")
+    if not np.isinf(inst.mem_cap).any():
+        raise ValueError("need an unbounded fallback tier for feasibility")
     slow_ok = inst.data_mem_ok[:, np.isinf(inst.mem_cap)].any(axis=1)
-    assert slow_ok.all(), "every block must be storable in the unbounded tier"
+    if not slow_ok.all():
+        raise ValueError("every block must be storable in the unbounded tier")
     inst.topological_order()  # raises if cyclic
 
 

@@ -37,6 +37,7 @@ Two search drivers share these semantics:
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import numpy as np
@@ -66,6 +67,27 @@ __all__ = [
 ]
 
 _WINDOW = APPROX_WINDOW  # approximate-evaluation look-ahead window (ops)
+
+
+def _maybe_sanitize(inst, sol, where: str, params, mk=None,
+                    capacity: bool = True) -> None:
+    """Certify an incumbent against the ILP constraints when sanitize mode
+    is on (``params.sanitize`` / ``REPRO_SANITIZE``; DESIGN §12).
+
+    The env check runs before any ``repro.analysis`` import so disabled
+    runs pay nothing; ``capacity=False`` skips capacity *rejection* for
+    incumbents whose allocation Alg-3 has not repaired yet this period.
+    """
+    flag = params.sanitize
+    if flag is None:
+        flag = os.environ.get("REPRO_SANITIZE", "").strip().lower() \
+            not in ("", "0", "false", "no", "off")
+    if not flag:
+        return
+    from ..analysis.sanitize import maybe_sanitize
+
+    maybe_sanitize(inst, sol, where=where, flag=True, reported_makespan=mk,
+                   enforce_capacity=capacity)
 
 
 def _mix32(*words: int) -> int:
@@ -106,6 +128,9 @@ class TSParams:
     max_evals: int | None = None       # hard cap on exact schedule evaluations
     backend: str = "numpy"             # exact-eval engine: numpy | jax | scalar
     mem_update_scalar: bool = False    # Alg-3 scalar oracle (parity/benchmarks)
+    # certify incumbents at commit/sync points against the ILP constraints
+    # (repro.analysis); None defers to the REPRO_SANITIZE env var
+    sanitize: bool | None = None
 
     @classmethod
     def fast(cls, seed: int = 0) -> "TSParams":
@@ -238,7 +263,8 @@ def _cc_moves(
 
 def apply_move(sol: Solution, move: Move) -> None:
     seq = sol.proc_seq[move.src_proc]
-    assert seq[move.src_pos] == move.task
+    if seq[move.src_pos] != move.task:
+        raise ValueError("move does not match the current sequence")
     seq.pop(move.src_pos)
     sol.proc_seq[move.dst_proc].insert(move.dst_pos, move.task)
     sol.assign[move.task] = move.dst_proc
@@ -494,7 +520,8 @@ def tabu_search(
     cur = memory_update(inst, init, refresh_every=params.mem_refresh_every,
                         scalar=params.mem_update_scalar)
     sched = exact_schedule(inst, cur)
-    assert sched is not None, "initial solution must be acyclic"
+    if sched is None:
+        raise ValueError("initial solution must be acyclic")
     best = cur.copy()
     best_mk = sched.makespan
     init_mk = best_mk
@@ -634,7 +661,8 @@ def tabu_search(
                                 scalar=params.mem_update_scalar)
             sched = exact_schedule(inst, cur)
             n_exact += 1
-            assert sched is not None
+            if sched is None:
+                raise RuntimeError("memory_update returned a cyclic solution")
         else:
             sched = chosen_sched  # cand unchanged since its candidate eval
 
@@ -644,6 +672,9 @@ def tabu_search(
             best_mk = sched.makespan
             history.append((it, best_mk))
             unimproved = 0
+            _maybe_sanitize(inst, best, "tabu_search incumbent commit", params,
+                            mk=best_mk,
+                            capacity=accepted % params.mem_update_period == 0)
         else:
             unimproved += 1
         if improved and _fire(on_improvement, True, sched.makespan):
@@ -732,7 +763,8 @@ def tabu_multiwalk(
     # init (and post-Alg-3) schedules come from the scalar DP like the legacy
     # driver: bit-identical to the numpy engine, and exact (float64) on jax
     scheds0 = [exact_schedule(inst, s) for s in cur_sols]
-    assert all(s is not None for s in scheds0), "initial solutions must be acyclic"
+    if not all(s is not None for s in scheds0):
+        raise ValueError("initial solutions must be acyclic")
     packed = PackedSolutions.from_solutions(inst, cur_sols)
     start = np.stack([s.start for s in scheds0])
     finish = np.stack([s.finish for s in scheds0])
@@ -944,7 +976,8 @@ def tabu_multiwalk(
                                       scalar=params.mem_update_scalar)
                 sched_w = exact_schedule(inst, sol_w)
                 n_exact += 1
-                assert sched_w is not None
+                if sched_w is None:
+                    raise RuntimeError("memory_update returned a cyclic solution")
                 sol_cache[w] = sol_w
                 packed.set_solution(w, sol_w)
                 start[w] = sched_w.start
@@ -960,6 +993,10 @@ def tabu_multiwalk(
                 best_mk[w] = cur_mk[w]
                 histories[w].append((it, float(best_mk[w])))
                 unimproved[w] = 0
+                _maybe_sanitize(
+                    inst, best_sols[w], f"tabu_multiwalk walk {w} incumbent",
+                    params, mk=float(best_mk[w]),
+                    capacity=accepted[w] % params.mem_update_period == 0)
             else:
                 unimproved[w] += 1
 

@@ -171,7 +171,8 @@ def random_layered(
         n_tasks = int(rng.integers(200, 301))
     if n_data is None:
         n_data = int(rng.integers(500, 701))
-    assert n_tasks >= 2, "recipe needs at least two tasks"
+    if n_tasks < 2:
+        raise ValueError("recipe needs at least two tasks")
 
     # --- DAG wiring, all-at-once --------------------------------------------
     # Data blocks carry most dependencies; direct task→task edges add the rest.
@@ -345,7 +346,8 @@ def fft(
 ) -> Instance:
     """FFT butterfly: task ``(l, i)`` consumes blocks ``(l-1, i)`` and
     ``(l-1, i XOR 2^(l-1))``; level 0 consumes ``width`` initial inputs."""
-    assert width >= 2 and (width & (width - 1)) == 0, "width must be a power of 2"
+    if width < 2 or (width & (width - 1)) != 0:
+        raise ValueError("width must be a power of 2")
     max_stages = int(np.log2(width))
     if stages is None:
         stages = max_stages
@@ -403,7 +405,8 @@ def stencil(
 ) -> Instance:
     """Series-parallel stencil layers: task ``(k, i)`` consumes blocks
     ``(k-1, i-radius .. i+radius)`` (clamped at the borders)."""
-    assert width >= 1 and steps >= 2 and radius >= 0
+    if width < 1 or steps < 2 or radius < 0:
+        raise ValueError("stencil needs width >= 1, steps >= 2, radius >= 0")
     n_tasks = steps * width
     cols = np.arange(width)
 

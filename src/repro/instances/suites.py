@@ -18,6 +18,7 @@ comparable across workload families.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Sequence
 
@@ -246,6 +247,7 @@ def sweep(
     walks: int = 4,
     seed: int = 0,
     device: dict | None = None,
+    sanitize: "bool | None" = None,
     **solver_kwargs,
 ) -> SweepReport:
     """Run a whole suite through one solver, grouped by shape bucket.
@@ -259,8 +261,28 @@ def sweep(
     with the same budget and walk inits.  ``suite`` may be a registered
     name, a :class:`Suite`, or a prebuilt instance list (e.g. from
     :func:`load_npz`).
+
+    ``sanitize`` (default: the ``REPRO_SANITIZE`` env var) certifies every
+    row's incumbent against the ILP constraints (DESIGN.md §12); rows then
+    carry ``certified: True`` and a bad incumbent raises ``SanitizeError``
+    instead of entering the report.
     """
     from ..core.api import Budget
+
+    do_sanitize = sanitize
+    if do_sanitize is None:
+        do_sanitize = os.environ.get("REPRO_SANITIZE", "").strip().lower() \
+            not in ("", "0", "false", "no", "off")
+
+    def _certify(inst: Instance, sol, mk: float, feasible=None) -> bool:
+        if not do_sanitize:
+            return False
+        from ..analysis.sanitize import maybe_sanitize
+
+        maybe_sanitize(inst, sol, where=f"sweep row ({inst.name})",
+                       flag=True, reported_makespan=mk,
+                       claimed_feasible=feasible)
+        return True
 
     budget = budget or Budget(time_limit=5.0, max_iters=400)
     if isinstance(suite, str):
@@ -307,9 +329,11 @@ def sweep(
             inits = [_walk_inits(inst, walks, seed) for inst in batch.instances]
             results = solve_instances(batch, inits, params, config=cfg)
             for ix, res in zip(grp, results):
+                certified = _certify(instances[ix], res.best,
+                                     float(res.best_makespan))
                 rows[ix] = _row(instances[ix], fams[ix], res.best_makespan,
                                 res.initial_makespan, res.iterations,
-                                res.elapsed)
+                                res.elapsed, certified=certified)
         cache_after = launch_cache_info()
         compiles = cache_after["misses"] - cache_before["misses"]
     else:
@@ -330,9 +354,12 @@ def sweep(
                     kw.setdefault("backend", backend)
                 rep = solve(instances[ix], solver, budget=budget, seed=seed,
                             **kw)
+                certified = rep.extras.get("certified") or _certify(
+                    instances[ix], rep.solution, rep.makespan,
+                    feasible=rep.feasible)
                 rows[ix] = _row(instances[ix], fams[ix], rep.makespan,
                                 rep.initial_makespan, rep.iterations,
-                                rep.wall_time)
+                                rep.wall_time, certified=certified)
 
     families: dict[str, dict] = {}
     for row in rows:
@@ -353,9 +380,10 @@ def sweep(
 
 
 def _row(inst: Instance, family: str, makespan: float, initial: float,
-         iterations: int, wall: float) -> dict:
+         iterations: int, wall: float, *, certified: bool = False) -> dict:
     lb = instance_bounds(inst)
     return {
+        "certified": bool(certified),
         "name": inst.name,
         "family": family,
         "n_tasks": inst.n_tasks,

@@ -22,6 +22,7 @@ and, when ``compilation_cache_dir`` is set, JAX's persistent cache.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 from ..core.api import (
@@ -60,6 +61,9 @@ class EngineConfig:
     batch_sizes: tuple = (1, 2, 4, 8)
     compilation_cache_dir: "str | None" = None
     validate: bool = True
+    # None defers to REPRO_SANITIZE; True certifies every served report
+    # against the ILP constraints before fan-out (DESIGN.md §12)
+    sanitize: "bool | None" = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -242,9 +246,29 @@ class Engine:
         self.n_requests += len(reqs)
         return results
 
+    def _sanitize_flag(self) -> bool:
+        if self.config.sanitize is not None:
+            return bool(self.config.sanitize)
+        return os.environ.get("REPRO_SANITIZE", "").strip().lower() not in (
+            "", "0", "false", "no", "off")
+
     def _result(self, req, report, assembled, wall, cache_delta):
         cut = assembled.cut
+        certified = bool(report.extras.get("certified"))
+        if not certified and self._sanitize_flag():
+            # the report may have been built with the env flag off (e.g.
+            # EngineConfig.sanitize=True alone) — certify it here so a bad
+            # incumbent raises SanitizeError instead of being served
+            from ..analysis.sanitize import maybe_sanitize
+
+            maybe_sanitize(
+                req.instance, report.solution,
+                where=f"serve result (rid {req.rid})", flag=True,
+                reported_makespan=report.makespan,
+                claimed_feasible=report.feasible)
+            certified = True
         return RequestResult(request=req, report=report, metrics={
+            "certified": certified,
             "rid": req.rid,
             "backend": self.config.backend,
             "cut_reason": cut.reason,

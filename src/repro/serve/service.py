@@ -87,10 +87,14 @@ class SolveService:
     async def start(self) -> "SolveService":
         """Warm the compile pool (on the solve lane, before any traffic)
         and start the dispatch thread."""
+        # lint: allow[RPR301] DESIGN §11 handoff: set on the event-loop thread
+        # before the dispatch thread exists; read-only afterwards
         self._loop = asyncio.get_running_loop()
         if self._warm_specs:
             await self._loop.run_in_executor(
                 self._pool, self.engine.warmup, self._warm_specs)
+        # lint: allow[RPR301] DESIGN §11 handoff: assigned before the dispatch
+        # thread starts; only start()/shutdown() (event-loop thread) touch it
         self._thread = threading.Thread(target=self._run,
                                         name="serve-dispatch", daemon=True)
         self._thread.start()
@@ -116,6 +120,8 @@ class SolveService:
                         q.put_nowait(_SENTINEL)
         if self._thread is not None:
             await self._loop.run_in_executor(None, self._thread.join)
+            # lint: allow[RPR301] DESIGN §11 handoff: cleared after join() —
+            # the dispatch thread is gone, only the event-loop thread remains
             self._thread = None
         self._pool.shutdown(wait=True)
 

@@ -1,0 +1,33 @@
+"""Fixture: RPR101 tracer-leak.  Linted as ``core/fixture.py``."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad(x):
+    if x > 0:  # RPR101: python branch on a traced value
+        return x
+    return -x
+
+
+@jax.jit
+def good_where(x):
+    return jnp.where(x > 0, x, -x)
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def good_static(x, mode):
+    # `mode` is static — branching on it retraces, it never leaks a tracer
+    if mode == "fast":
+        return x
+    return x * 2.0
+
+
+@jax.jit
+def good_none_check(x, bias=None):
+    # structure check, resolved at trace time — not a tracer leak
+    if bias is None:
+        return x
+    return x + bias

@@ -1,0 +1,25 @@
+"""Fixture: RPR102 host-sync.  Linted as ``core/fixture.py``."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad_float(x):
+    return float(x)  # RPR102: concretizes the tracer
+
+
+@jax.jit
+def bad_asarray(x):
+    y = x + 1.0
+    return np.asarray(y)  # RPR102: device->host transfer inside jit
+
+
+def good_host_side(x):
+    # not a traced function: host conversions are fine here
+    return float(x)
+
+
+@jax.jit
+def good_shape(x):
+    # static metadata access never syncs
+    return x.reshape(int(np.prod(x.shape)))

@@ -1,0 +1,12 @@
+"""Fixture: RPR103 cumsum-parity.  Linted as ``core/eval_batch.py``
+(a parity-critical module)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def bad(a):
+    return jnp.cumsum(a)  # RPR103: parallel scan breaks bit parity
+
+
+def good_numpy(a):
+    return np.cumsum(a)  # the sequential reference is the parity anchor

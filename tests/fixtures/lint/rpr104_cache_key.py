@@ -1,0 +1,33 @@
+"""Fixture: RPR104 cache-key-coverage.  Linted as ``core/fixture.py``."""
+
+
+def make(*args):
+    return lambda *a: a
+
+
+def bad(cache, n_tasks, n_data, sync_every):
+    key = (n_tasks, n_data)
+    fn = cache.get(key)  # RPR104: `sync_every` neither in key nor runtime
+    if fn is None:
+        fn = make(n_tasks, n_data, sync_every)
+        cache.put(key, fn)
+    return fn(n_tasks)
+
+
+def good(cache, n_tasks, n_data, sync_every):
+    key = (n_tasks, n_data, sync_every)
+    fn = cache.get(key)
+    if fn is None:
+        fn = make(n_tasks, n_data, sync_every)
+        cache.put(key, fn)
+    return fn(n_tasks)
+
+
+def good_runtime_arg(cache, n_tasks, dur):
+    # `dur` is a runtime argument of the cached fn — not baked in
+    key = (n_tasks,)
+    fn = cache.get(key)
+    if fn is None:
+        fn = make(n_tasks)
+        cache.put(key, fn)
+    return fn(dur)

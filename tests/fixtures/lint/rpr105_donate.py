@@ -1,0 +1,31 @@
+"""Fixture: RPR105 donate-rebind.  Linted as ``core/fixture.py``."""
+import jax
+
+
+def bad_direct(state):
+    step = jax.jit(lambda s: s + 1.0, donate_argnums=(0,))
+    out = step(state)  # RPR105: `state` donated but read again below
+    return state + out
+
+
+def good_rebind(state):
+    step = jax.jit(lambda s: s + 1.0, donate_argnums=(0,))
+    state = step(state)
+    return state
+
+
+def _make_step():
+    step = jax.jit(lambda s: s + 1.0, donate_argnums=(0,))
+    return step
+
+
+def bad_via_maker(state):
+    step = _make_step()
+    out = step(state)  # RPR105: maker-returned jit also donates position 0
+    return state * out
+
+
+def good_via_maker(state):
+    step = _make_step()
+    state = step(state)
+    return state

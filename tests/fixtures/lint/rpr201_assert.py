@@ -1,0 +1,29 @@
+"""Fixture: RPR201 bare-assert.  Linted as ``core/fixture.py``."""
+import numpy as np
+
+
+def public_fn(a, b):
+    assert a > 0, "a must be positive"  # RPR201: vanishes under -O
+    return a + b
+
+
+def _private_fn(a):
+    assert a > 0  # private helpers may assert internal invariants
+    return a
+
+
+def good_raises(a):
+    if a <= 0:
+        raise ValueError("a must be positive")
+    return np.sqrt(a)
+
+
+class Thing:
+    def method(self, n):
+        assert n >= 0  # RPR201: public method input validation
+        return n
+
+    def good(self, n):
+        if n < 0:
+            raise ValueError("n must be >= 0")
+        return n

@@ -1,0 +1,15 @@
+"""Fixture: RPR301 serve-unlocked-write.  Linted as ``serve/fixture.py``."""
+import threading
+
+
+class Service:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.state = 0  # __init__ is exempt: no other thread has a ref yet
+
+    def good_locked(self, v):
+        with self._lock:
+            self.state = v
+
+    def bad_unlocked(self, v):
+        self.state = v  # RPR301: cross-thread state outside the lock

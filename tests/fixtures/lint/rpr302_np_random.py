@@ -1,0 +1,10 @@
+"""Fixture: RPR302 legacy-np-random.  Linted as ``core/fixture.py``."""
+import numpy as np
+
+
+def bad():
+    return np.random.rand(3)  # RPR302: global RNG, unseeded
+
+
+def good(seed):
+    return np.random.default_rng(seed).random(3)

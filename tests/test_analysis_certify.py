@@ -1,0 +1,318 @@
+"""Adversarial certifier tests (DESIGN.md §12).
+
+Strategy: take a known-good solution, mutate it along exactly one ILP
+constraint axis, and assert the certificate rejects with that kind.  The
+checker is written independently of the repo's evaluators, so agreement
+on good solutions and targeted rejection on corrupted ones is evidence
+for both sides.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis.certify import (
+    CONSTRAINT_EQS,
+    certify_report,
+    certify_schedule,
+    certify_solution,
+    simulate_schedule,
+    task_durations,
+)
+from repro.analysis.sanitize import SanitizeError, maybe_sanitize
+from repro.core.api import Budget, solve
+from repro.core.mdfg import Instance
+from repro.core.solution import Solution, exact_schedule
+from repro.instances.registry import generate
+
+
+def _solved(seed=0, method="greedy:slack_first", **gen):
+    gen.setdefault("n_tasks", 14)
+    gen.setdefault("n_data", 12)
+    inst = generate("random_layered", seed, **gen)
+    rep = solve(inst, method, budget=Budget(max_iters=20), seed=seed)
+    return inst, rep
+
+
+def _edges(inst):
+    edges = {tuple(map(int, e)) for e in
+             np.asarray(inst.task_edges).reshape(-1, 2)}
+    for d in range(inst.n_data):
+        p = int(inst.producer[d])
+        if p < 0:
+            continue
+        for c in inst.cons_idx[inst.cons_indptr[d]:inst.cons_indptr[d + 1]]:
+            if int(c) != p:
+                edges.add((p, int(c)))
+    return edges
+
+
+# ------------------------------------------------------------------ #
+# agreement on known-good solutions                                  #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("method", ["greedy:slack_first", "load_balance", "tabu"])
+def test_known_good_certifies(method):
+    for seed in range(3):
+        inst, rep = _solved(seed=seed, method=method)
+        cert = certify_report(inst, rep)
+        assert cert.ok, cert.summary()
+        assert not cert.violations
+        # every constraint family was actually exercised
+        for kind in ("assignment", "allocation", "precedence", "overlap",
+                     "residency", "makespan"):
+            assert cert.checked.get(kind, 0) >= 1, kind
+
+
+def test_simulation_matches_exact_schedule():
+    for seed in range(4):
+        inst, rep = _solved(seed=seed)
+        sol = rep.solution
+        dur = task_durations(inst, sol.assign, sol.mem)
+        start, finish, viols = simulate_schedule(inst, sol, dur)
+        assert not viols
+        sched = exact_schedule(inst, sol)
+        np.testing.assert_allclose(start, sched.start, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(finish, sched.finish, rtol=1e-9, atol=1e-9)
+
+
+def test_constraint_catalog_is_complete():
+    assert set(CONSTRAINT_EQS) == {
+        "assignment", "overlap", "allocation", "capacity", "precedence",
+        "residency", "duration", "makespan", "feasibility",
+    }
+
+
+# ------------------------------------------------------------------ #
+# one corruption per constraint axis                                 #
+# ------------------------------------------------------------------ #
+def test_precedence_corruption_rejected():
+    inst, rep = _solved()
+    sol = rep.solution.copy()
+    edges = _edges(inst)
+    swapped = False
+    for seq in sol.proc_seq:
+        for i in range(len(seq)):
+            for j in range(i + 1, len(seq)):
+                if (seq[i], seq[j]) in edges:
+                    seq[i], seq[j] = seq[j], seq[i]
+                    swapped = True
+                    break
+            if swapped:
+                break
+        if swapped:
+            break
+    assert swapped, "fixture instance must have a same-core dependent pair"
+    cert = certify_solution(inst, sol)
+    assert not cert.ok
+    assert "precedence" in cert.kinds(), cert.summary()
+
+
+def test_assignment_corruption_rejected():
+    inst, rep = _solved()
+    sol = rep.solution.copy()
+    assign = np.array(sol.assign)
+    assign[0] = inst.n_procs + 7  # invalid processor id
+    bad = Solution(assign=assign, mem=sol.mem, proc_seq=sol.proc_seq)
+    cert = certify_solution(inst, bad)
+    assert not cert.ok
+    assert cert.kinds() == {"assignment"}
+
+
+def test_sequencing_mismatch_rejected():
+    inst, rep = _solved()
+    sol = rep.solution.copy()
+    # sequence a task on a core it is not assigned to
+    moved = None
+    for p, seq in enumerate(sol.proc_seq):
+        if seq:
+            moved = seq.pop(0)
+            sol.proc_seq[(p + 1) % inst.n_procs].append(moved)
+            break
+    assert moved is not None
+    cert = certify_solution(inst, sol)
+    assert not cert.ok
+    assert "assignment" in cert.kinds()
+
+
+def test_allocation_corruption_rejected():
+    inst, rep = _solved()
+    sol = rep.solution.copy()
+    mem = np.array(sol.mem)
+    mem[0] = inst.n_mems + 3  # invalid tier id
+    bad = Solution(assign=sol.assign, mem=mem, proc_seq=sol.proc_seq)
+    cert = certify_solution(inst, bad)
+    assert not cert.ok
+    assert "allocation" in cert.kinds()
+
+
+def test_makespan_misreport_rejected():
+    inst, rep = _solved()
+    cert = certify_solution(inst, rep.solution,
+                            reported_makespan=rep.makespan * 2.0)
+    assert not cert.ok
+    assert "makespan" in cert.kinds()
+
+
+def test_overlap_corruption_rejected():
+    inst, rep = _solved()
+    sol = rep.solution
+    sched = exact_schedule(inst, sol)
+    start = np.zeros_like(sched.start)  # cram every task to t=0
+    dur = sched.finish - sched.start
+    cert = certify_schedule(inst, sol, start, dur)
+    assert not cert.ok
+    assert "overlap" in cert.kinds()
+
+
+def test_duration_corruption_rejected():
+    inst, rep = _solved()
+    sol = rep.solution
+    sched = exact_schedule(inst, sol)
+    finish = np.array(sched.finish)
+    finish[-1] += 0.5 * (1.0 + sched.makespan)  # stretch one window
+    cert = certify_schedule(inst, sol, sched.start, finish)
+    assert not cert.ok
+    assert "duration" in cert.kinds()
+
+
+def test_residency_corruption_rejected():
+    inst, rep = _solved()
+    sol = rep.solution
+    # find a produced block with a consumer on another task
+    target = None
+    for d in range(inst.n_data):
+        p = int(inst.producer[d])
+        cons = inst.cons_idx[inst.cons_indptr[d]:inst.cons_indptr[d + 1]]
+        for c in cons:
+            if p >= 0 and int(c) != p:
+                target = (p, int(c))
+                break
+        if target:
+            break
+    assert target, "fixture instance must have a produced+consumed block"
+    p, c = target
+    sched = exact_schedule(inst, sol)
+    start = np.array(sched.start)
+    finish = np.array(sched.finish)
+    w = finish[c] - start[c]
+    start[c] = start[p] - 1.0  # consumer begins before its block exists
+    finish[c] = start[c] + w
+    cert = certify_schedule(inst, sol, start, finish)
+    assert not cert.ok
+    assert "residency" in cert.kinds()
+
+
+# ------------------------------------------------------------------ #
+# capacity + feasibility-claim semantics (handcrafted instance)      #
+# ------------------------------------------------------------------ #
+def _two_task_instance():
+    """Block 0 (size 10, initial input consumed by task 0) and block 1
+    (size 6, produced by task 1); one core, finite tier of capacity 10."""
+    return Instance(
+        n_tasks=2,
+        n_data=2,
+        task_edges=np.zeros((0, 2), np.int64),
+        producer=np.array([-1, 1]),
+        cons_indptr=np.array([0, 1, 1]),
+        cons_idx=np.array([0]),
+        in_indptr=np.array([0, 1, 1]),
+        in_idx=np.array([0]),
+        out_indptr=np.array([0, 0, 1]),
+        out_idx=np.array([1]),
+        proc_time=np.array([[2.0], [3.0]]),
+        data_size=np.array([10.0, 6.0]),
+        mem_cap=np.array([10.0, np.inf]),
+        access_time=np.array([[0.1, 0.2]]),
+        mem_level=np.array([0, 1]),
+        data_mem_ok=np.ones((2, 2), bool),
+    )
+
+
+def _both_in_finite_tier(order):
+    return Solution(
+        assign=np.zeros(2, np.int64),
+        mem=np.zeros(2, np.int64),
+        proc_seq=[list(order)],
+    )
+
+
+def test_capacity_tie_is_not_a_violation():
+    # order [0, 1]: block 0 dies exactly when block 1 is born — the
+    # releases-before-acquires tie-break must keep the peak at 10
+    inst = _two_task_instance()
+    cert = certify_solution(inst, _both_in_finite_tier([0, 1]))
+    assert cert.ok, cert.summary()
+
+
+def test_capacity_overcommit_rejected():
+    # order [1, 0]: both blocks alive concurrently (16 > 10)
+    inst = _two_task_instance()
+    cert = certify_solution(inst, _both_in_finite_tier([1, 0]))
+    assert not cert.ok
+    assert "capacity" in cert.kinds()
+    (v,) = cert.by_kind("capacity")
+    assert v.tier == 0
+
+
+def test_claimed_infeasible_is_honest_not_rejected():
+    inst = _two_task_instance()
+    cert = certify_solution(inst, _both_in_finite_tier([1, 0]),
+                            claimed_feasible=False)
+    assert cert.ok  # recorded, consistent with the claim
+    assert "capacity" in cert.kinds()
+
+
+def test_claimed_feasible_but_overcommitted_rejected():
+    inst = _two_task_instance()
+    cert = certify_solution(inst, _both_in_finite_tier([1, 0]),
+                            claimed_feasible=True)
+    assert not cert.ok
+
+
+def test_claimed_infeasible_but_fine_rejected():
+    inst = _two_task_instance()
+    cert = certify_solution(inst, _both_in_finite_tier([0, 1]),
+                            claimed_feasible=False)
+    assert not cert.ok
+    assert "feasibility" in cert.kinds()
+
+
+def test_enforce_capacity_off_records_without_rejecting():
+    inst = _two_task_instance()
+    cert = certify_solution(inst, _both_in_finite_tier([1, 0]),
+                            enforce_capacity=False)
+    assert cert.ok
+    assert "capacity" in cert.kinds()
+
+
+# ------------------------------------------------------------------ #
+# sanitize hook                                                      #
+# ------------------------------------------------------------------ #
+def test_maybe_sanitize_off_is_noop(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    inst = _two_task_instance()
+    assert maybe_sanitize(inst, _both_in_finite_tier([1, 0]),
+                          where="test") is None
+
+
+def test_maybe_sanitize_raises_with_certificate():
+    inst = _two_task_instance()
+    with pytest.raises(SanitizeError) as ei:
+        maybe_sanitize(inst, _both_in_finite_tier([1, 0]),
+                       where="unit test", flag=True)
+    assert "unit test" in str(ei.value)
+    assert "capacity" in ei.value.certificate.kinds()
+
+
+def test_maybe_sanitize_returns_certificate_when_good():
+    inst = _two_task_instance()
+    cert = maybe_sanitize(inst, _both_in_finite_tier([0, 1]),
+                          where="unit test", flag=True)
+    assert cert is not None and cert.ok
+
+
+def test_report_without_solution_rejected():
+    inst, rep = _solved()
+    bad = dataclasses.replace(rep, solution=None)
+    cert = certify_report(inst, bad)
+    assert not cert.ok

@@ -1,0 +1,143 @@
+"""Lint engine tests: one fixture per rule, suppression semantics, ratchet.
+
+Each fixture under ``tests/fixtures/lint/`` contains the bad pattern the
+rule exists for *plus* near-miss good patterns that must NOT fire — the
+false-positive guards are as load-bearing as the detections.
+"""
+import pathlib
+
+import pytest
+
+from repro.analysis.lint import (
+    LintReport,
+    lint_paths,
+    lint_source,
+    load_baseline,
+    ratchet_regressions,
+    write_baseline,
+)
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "lint"
+
+# fixture file, modpath it is linted as, expected rule, expected count
+CASES = [
+    ("rpr101_tracer_leak.py", "core/fixture.py", "RPR101", 1),
+    ("rpr102_host_sync.py", "core/fixture.py", "RPR102", 2),
+    ("rpr103_cumsum.py", "core/eval_batch.py", "RPR103", 1),
+    ("rpr104_cache_key.py", "core/fixture.py", "RPR104", 1),
+    ("rpr105_donate.py", "core/fixture.py", "RPR105", 2),
+    ("rpr201_assert.py", "core/fixture.py", "RPR201", 2),
+    ("rpr301_serve_lock.py", "serve/fixture.py", "RPR301", 1),
+    ("rpr302_np_random.py", "core/fixture.py", "RPR302", 1),
+]
+
+
+@pytest.mark.parametrize("fname,modpath,rule,count",
+                         CASES, ids=[c[2] for c in CASES])
+def test_rule_fixture(fname, modpath, rule, count):
+    src = (FIXTURES / fname).read_text()
+    findings, suppressed = lint_source(src, modpath)
+    hits = [f for f in findings if f.rule == rule]
+    assert len(hits) == count, [f"{f.rule}@{f.line}" for f in findings]
+    # the good patterns in the same fixture must not fire anything else
+    others = [f for f in findings if f.rule != rule]
+    assert not others, [f"{f.rule}@{f.line}: {f.message}" for f in others]
+    assert not suppressed
+
+
+def test_findings_are_span_accurate():
+    src = (FIXTURES / "rpr302_np_random.py").read_text()
+    findings, _ = lint_source(src, "core/fixture.py")
+    (f,) = findings
+    line = src.splitlines()[f.line - 1]
+    assert "np.random.rand" in line
+    assert line[f.col :].startswith("np.random.rand")
+
+
+# ------------------------------------------------------------------ #
+# suppression semantics                                              #
+# ------------------------------------------------------------------ #
+_BAD = "import numpy as np\n\n\ndef f():\n    return np.random.rand()\n"
+
+
+def test_justified_suppression_moves_finding():
+    src = _BAD.replace(
+        "rand()", "rand()  # lint: allow[RPR302] test seam; DESIGN §9 exception"
+    )
+    findings, suppressed = lint_source(src, "core/x.py")
+    assert not findings
+    assert len(suppressed) == 1
+    assert suppressed[0].finding.rule == "RPR302"
+    assert "DESIGN" in suppressed[0].justification
+
+
+def test_bare_suppression_keeps_finding_and_adds_rpr000():
+    src = _BAD.replace("rand()", "rand()  # lint: allow[RPR302]")
+    findings, suppressed = lint_source(src, "core/x.py")
+    assert sorted(f.rule for f in findings) == ["RPR000", "RPR302"]
+    assert not suppressed
+
+
+def test_comment_line_suppression_covers_code_below():
+    src = (
+        "import numpy as np\n\n\ndef f():\n"
+        "    # lint: allow[RPR302] justification spanning\n"
+        "    # a continuation comment line; DESIGN §9\n"
+        "    return np.random.rand()\n"
+    )
+    findings, suppressed = lint_source(src, "core/x.py")
+    assert not findings
+    assert len(suppressed) == 1
+
+
+def test_suppression_is_rule_scoped():
+    # an allow for a different rule does not silence this finding
+    src = _BAD.replace("rand()", "rand()  # lint: allow[RPR101] wrong rule")
+    findings, _ = lint_source(src, "core/x.py")
+    assert [f.rule for f in findings] == ["RPR302"]
+
+
+# ------------------------------------------------------------------ #
+# ratchet                                                            #
+# ------------------------------------------------------------------ #
+def _report_with_one_finding() -> LintReport:
+    findings, _ = lint_source(_BAD, "core/x.py")
+    assert len(findings) == 1
+    return LintReport(findings=findings, suppressed=[], n_files=1)
+
+
+def test_ratchet_flags_new_findings():
+    report = _report_with_one_finding()
+    regs = ratchet_regressions(report, {})
+    assert regs and "RPR302:core/x.py" in regs[0]
+
+
+def test_ratchet_allows_baselined_findings():
+    report = _report_with_one_finding()
+    assert ratchet_regressions(report, {"RPR302:core/x.py": 1}) == []
+    # and a *different* bucket in the baseline does not help
+    assert ratchet_regressions(report, {"RPR302:core/other.py": 5})
+
+
+def test_baseline_roundtrip(tmp_path):
+    report = _report_with_one_finding()
+    path = write_baseline(report, tmp_path / "ratchet.json")
+    assert load_baseline(path) == {"RPR302:core/x.py": 1}
+    assert ratchet_regressions(report, load_baseline(path)) == []
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert load_baseline(tmp_path / "absent.json") == {}
+
+
+# ------------------------------------------------------------------ #
+# the repo itself must be clean                                      #
+# ------------------------------------------------------------------ #
+def test_repo_has_zero_unsuppressed_findings():
+    report = lint_paths()
+    assert report.ok, [
+        f"{f.path}:{f.line}: {f.rule} {f.message}" for f in report.findings
+    ]
+    # every suppression in the tree carries a justification citing DESIGN
+    for s in report.suppressed:
+        assert "DESIGN" in s.justification, s.finding.as_json()
