@@ -1,0 +1,421 @@
+"""Chaos bench: the serving stack under deterministic fault injection
+(DESIGN.md §13).
+
+Section A (service): the numpy-backend solve service under the same
+Poisson mixed-family traffic as ``serve_bench``, three times — faults off
+(injection gate cold), an *empty* active plan (rate 0: every decision
+runs, nothing fires — the harness-overhead probe), and a seeded
+:class:`~repro.faults.FaultPlan` firing all six fault kinds at ≥10% per
+decision.  Gates:
+
+* **zero lost or duplicated requests** — every admitted rid reaches
+  exactly one terminal state (result or typed ``ReproError``);
+* **all served results certified** — the bench forces ``REPRO_SANITIZE``
+  on, so a corrupted incumbent can only surface as a typed
+  ``CertifyFailure``, never as a served result; survivors are additionally
+  re-certified post-hoc (untimed) and bit-compared against solo solves;
+* **bounded fault p99** — client-clock p99 latency under faults stays
+  within ``REPRO_CHAOS_P99_FACTOR``× (default 20) of the in-run
+  fault-free baseline (faults cost retries/backoff, not unbounded time);
+* **harness overhead** — empty-plan throughput within
+  ``REPRO_CHAOS_OVERHEAD_FRAC`` of faults-off throughput (the decision
+  hash is not allowed to tax the fault-free fast path).  The fault-free
+  lane is also recorded against ``BENCH_serve.json``'s numpy lane when
+  that file exists (different profiles — recorded, not gated).
+
+Section B (search state): a device-backend W=1 multiwalk run is crashed
+by an injected ``device_lost`` at a :func:`would_fire`-predicted sync
+boundary, checkpointed, saved to disk, reloaded, and resumed.  Gates:
+bit-identical final result vs. the uncrashed run (makespan, trajectory,
+eval counters, incumbent arrays) and incumbent monotonicity across the
+crash/resume seam.
+
+Writes ``BENCH_chaos.json`` and appends a ``chaos`` record to
+``results/bench/history.jsonl``.
+
+    PYTHONPATH=src REPRO_SANITIZE=1 python -m benchmarks.chaos_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.faults import (
+    FaultPlan,
+    QueueOverload,
+    ReproError,
+    plan_context,
+    would_fire,
+)
+from repro.serve import BatchPolicy, EngineConfig, SolveService
+
+from .common import (
+    REPO_ROOT,
+    RESULTS_DIR,
+    append_history,
+    certify_incumbents,
+    emit,
+    save_json,
+)
+from .serve_bench import (
+    Profile,
+    build_trace,
+    report_parity,
+    run_solo,
+    serve_params,
+)
+
+
+def chaos_profile(smoke: bool) -> Profile:
+    from repro.core.api import Budget
+
+    if smoke:
+        return Profile(
+            families=(("random_layered", {"n_tasks": 40, "n_data": 100}),
+                      ("out_tree", {"n_tasks": 40})),
+            n_requests=12, walks=2, budget=Budget(max_iters=6),
+            rate=60.0, batch_sizes=(4,), sync_every=8, crit_cap=32)
+    return Profile(
+        families=(("random_layered", {"n_tasks": 70, "n_data": 160}),
+                  ("out_tree", {"n_tasks": 70}),
+                  ("fft", {"width": 16, "stages": 4})),
+        n_requests=40, walks=4, budget=Budget(max_iters=12),
+        rate=8.0, batch_sizes=(1, 2, 4, 8), sync_every=8, crit_cap=64)
+
+
+def fault_plan(args, smoke: bool) -> FaultPlan:
+    """All six kinds, ≥10% per decision.  ``skew_seconds`` is kept small
+    so injected clock skew perturbs scheduling decisions without dwarfing
+    the latency signal the p99 gate reads (which uses the client clock)."""
+    return FaultPlan(seed=args.fault_seed, rate=args.fault_rate,
+                     kinds=("launch_error", "device_lost", "compile_hang",
+                            "corrupt_incumbent", "nan_duration",
+                            "clock_skew"),
+                     hang_seconds=0.05, skew_seconds=0.5)
+
+
+# --------------------------------------------------------------------------- #
+# Section A: the service under traffic                                        #
+# --------------------------------------------------------------------------- #
+async def _run_service(items, arrivals, prof, params,
+                       plan: "FaultPlan | None"):
+    """One trace through the numpy-backend service under ``plan``.
+
+    Every admitted rid is driven to a terminal state; outcomes and
+    client-clock latencies are returned for the accounting gates."""
+    cfg = EngineConfig(backend="numpy", sync_every=prof.sync_every,
+                       crit_cap=prof.crit_cap,
+                       batch_sizes=prof.batch_sizes)
+    svc = SolveService(
+        config=cfg,
+        policy=BatchPolicy(max_batch=max(prof.batch_sizes), max_wait=0.02),
+        params=params)
+    with plan_context(plan):
+        await svc.start()
+        t0 = time.monotonic()
+        submitted = []          # (item index, rid, client submit time)
+        shed = 0
+        for k, item in enumerate(items):
+            now = time.monotonic() - t0
+            if arrivals[k] > now:
+                await asyncio.sleep(arrivals[k] - now)
+            try:
+                rid = await svc.submit(item["instance"], prof.budget,
+                                       seed=item["seed"], walks=prof.walks)
+            except QueueOverload:
+                shed += 1
+                continue
+            submitted.append((k, rid, time.monotonic()))
+        ok, failed, lost = {}, {}, []
+        latencies = []
+        for k, rid, t_sub in submitted:
+            try:
+                rr = await asyncio.wait_for(svc.result(rid), timeout=300.0)
+                ok[rid] = (k, rr)
+                latencies.append(time.monotonic() - t_sub)
+            except ReproError as e:
+                failed[rid] = (k, e)
+            except asyncio.TimeoutError:
+                lost.append(rid)
+        wall = time.monotonic() - t0
+        metrics = svc.metrics()
+        await svc.shutdown()
+    rids = [rid for _, rid, _ in submitted]
+    return {
+        "n": len(items),
+        "submitted": len(submitted),
+        "shed": shed,
+        "ok": ok,
+        "failed": failed,
+        "lost": len(lost),
+        "duplicate_rids": len(rids) - len(set(rids)),
+        "latencies": sorted(latencies),
+        "wall": wall,
+        "metrics": metrics,
+    }
+
+
+def _lat(latencies, q: float) -> float:
+    if not latencies:
+        return 0.0
+    return latencies[min(len(latencies) - 1, int(q * len(latencies)))]
+
+
+def service_lane(args, prof: Profile) -> dict:
+    params = serve_params()
+    items, arrivals = build_trace(prof, args.seed)
+    solo = [run_solo(item, prof, params, "numpy") for item in items]
+
+    runs = {}
+    for label, plan in (
+        ("off", None),                                       # gate cold
+        ("empty", FaultPlan(seed=args.fault_seed, rate=0.0)),  # hot, silent
+        ("faults", fault_plan(args, args.smoke)),
+    ):
+        runs[label] = asyncio.run(
+            _run_service(items, arrivals, prof, params, plan))
+
+    payload = {"requests": len(items), "plan": {
+        "seed": args.fault_seed, "rate": args.fault_rate,
+        "kinds": list(fault_plan(args, args.smoke).kinds)}}
+    for label, run in runs.items():
+        n_ok, n_failed = len(run["ok"]), len(run["failed"])
+        terminal = n_ok + n_failed + run["shed"] + run["lost"]
+        parity = all(report_parity(rr.report, solo[k])
+                     for k, rr in run["ok"].values())
+        certified = certify_incumbents(
+            [(items[k]["instance"], rr.report.solution, rr.report.makespan,
+              rr.report.feasible) for k, rr in run["ok"].values()],
+            f"chaos bench {label} lane")
+        payload[label] = {
+            "completed": n_ok,
+            "failed": n_failed,
+            "failed_types": sorted({type(e).__name__
+                                    for _, e in run["failed"].values()}),
+            "shed": run["shed"],
+            "lost": run["lost"],
+            "duplicate_rids": run["duplicate_rids"],
+            "terminal_accounted": terminal == run["n"],
+            "parity_ok": parity,
+            "certified": certified,
+            "wall_seconds": run["wall"],
+            "solved_per_s": n_ok / max(run["wall"], 1e-9),
+            "latency_p50": _lat(run["latencies"], 0.50),
+            "latency_p99": _lat(run["latencies"], 0.99),
+            "resilience": run["metrics"].get("resilience", {}),
+        }
+        emit(f"chaos_{label}", payload[label]["latency_p99"] * 1e6,
+             f"{n_ok} ok / {n_failed} failed / {run['shed']} shed, "
+             f"p99 {payload[label]['latency_p99']*1e3:.0f}ms")
+
+    # p99 bound: faults lane vs the in-run fault-free lane
+    factor = float(os.environ.get("REPRO_CHAOS_P99_FACTOR", "20"))
+    p99_free = payload["off"]["latency_p99"]
+    p99_fault = payload["faults"]["latency_p99"]
+    payload["p99_factor"] = factor
+    payload["p99_bound"] = max(1.0, factor * p99_free)
+    payload["p99_ok"] = p99_fault <= payload["p99_bound"]
+
+    # harness overhead: empty active plan vs gate-cold fault-free run
+    frac = float(os.environ.get("REPRO_CHAOS_OVERHEAD_FRAC",
+                                "0.5" if args.smoke else "0.05"))
+    thr_off = payload["off"]["solved_per_s"]
+    thr_empty = payload["empty"]["solved_per_s"]
+    payload["overhead_frac_allowed"] = frac
+    payload["overhead_ok"] = thr_empty >= (1.0 - frac) * thr_off
+    payload["overhead_observed_frac"] = \
+        0.0 if thr_off <= 0 else max(0.0, 1.0 - thr_empty / thr_off)
+
+    # cross-run reference (recorded, not gated: profiles differ)
+    ref_path = os.path.join(REPO_ROOT, "BENCH_serve.json")
+    if os.path.exists(ref_path):
+        try:
+            with open(ref_path) as f:
+                ref = json.load(f)
+            np_lane = ref.get("lanes", {}).get("numpy")
+            if np_lane:
+                payload["bench_serve_numpy"] = {
+                    "latency_p99": np_lane["served"]["latency_p99"],
+                    "solved_per_s": np_lane["served"]["solved_per_s"],
+                    "p99_ratio_faults_vs_serve_bench":
+                        p99_fault / max(np_lane["served"]["latency_p99"],
+                                        1e-9),
+                }
+        except (KeyError, ValueError):
+            pass
+    return payload
+
+
+# --------------------------------------------------------------------------- #
+# Section B: crash/resume of device search state                              #
+# --------------------------------------------------------------------------- #
+def crash_resume_lane(args) -> dict:
+    from repro.core import TSParams, random_instance
+    from repro.core.device_search import DeviceConfig, device_multiwalk
+    from repro.core.greedy import construct_greedy
+    from repro.faults import DeviceLost
+    from repro.faults import checkpoint as ckpt_io
+
+    smoke = args.smoke
+    inst = random_instance(args.seed,
+                           n_tasks=30 if smoke else 60,
+                           n_data=80 if smoke else 150)
+    params = TSParams(max_iters=24 if smoke else 48, max_unimproved=10**9,
+                      time_limit=10**9, top_k=5, seed=args.seed)
+    cfg = DeviceConfig(sync_every=4)
+    inits = [construct_greedy(inst, "slack_first", rng=args.seed)]
+
+    # uncrashed reference (W=1), collecting every sync checkpoint
+    ref_ckpts = []
+    ref = device_multiwalk(inst, [s.copy() for s in inits], params,
+                           config=cfg, on_checkpoint=ref_ckpts.append)
+    n_syncs = len(ref_ckpts)
+
+    # pick a plan whose first predicted crash lands strictly inside the
+    # run, so there is search left to survive (would_fire = host replay)
+    fault_seed, crash_sync = args.fault_seed, None
+    while crash_sync is None:
+        plan = FaultPlan(seed=fault_seed, rate=0.25,
+                         kinds=("device_lost",),
+                         points=("device_search.sync",))
+        hits = [k for k in range(1, n_syncs)
+                if would_fire(plan, "fire", "device_search.sync", k)]
+        if hits:
+            crash_sync = hits[0]
+        else:
+            fault_seed += 1
+
+    crash_ckpts = []
+    crashed = False
+    try:
+        with plan_context(plan):
+            device_multiwalk(inst, [s.copy() for s in inits], params,
+                             config=cfg, on_checkpoint=crash_ckpts.append)
+    except DeviceLost:
+        crashed = True
+    if not crashed or len(crash_ckpts) != crash_sync:
+        raise SystemExit(
+            f"chaos crash/resume: predicted device_lost at sync "
+            f"{crash_sync} did not materialize "
+            f"(crashed={crashed}, checkpoints={len(crash_ckpts)})")
+
+    # survive the crash through *disk*: save → reload → resume
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "chaos_crash.ckpt.npz")
+    ckpt_io.save(crash_ckpts[-1], path)
+    restored = ckpt_io.load(path)
+    resume_ckpts = []
+    resumed = device_multiwalk(inst, [s.copy() for s in inits], params,
+                               config=cfg, resume_from=restored,
+                               on_checkpoint=resume_ckpts.append)
+
+    identical = (
+        resumed.best_makespan == ref.best_makespan
+        and resumed.iterations == ref.iterations
+        and resumed.history == ref.history
+        and resumed.n_exact_evals == ref.n_exact_evals
+        and resumed.n_approx_evals == ref.n_approx_evals
+        and resumed.stop_reason == ref.stop_reason
+        and np.array_equal(resumed.best.assign, ref.best.assign)
+        and np.array_equal(resumed.best.mem, ref.best.mem)
+        and resumed.best.proc_seq == ref.best.proc_seq)
+
+    # incumbent monotonicity across the crash/resume seam
+    g_seq = [c.g_best for c in crash_ckpts] + \
+        [c.g_best for c in resume_ckpts]
+    monotone = all(b <= a + 1e-12 for a, b in zip(g_seq, g_seq[1:])) \
+        and (not g_seq or resumed.best_makespan <= g_seq[-1] + 1e-12)
+
+    lane = {
+        "walks": 1,
+        "syncs": n_syncs,
+        "crash_sync": crash_sync,
+        "fault_seed": fault_seed,
+        "resumed_identical": identical,
+        "incumbent_monotone": monotone,
+        "best_makespan": float(resumed.best_makespan),
+        "checkpoint_file": os.path.relpath(path, REPO_ROOT),
+    }
+    emit("chaos_crash_resume", 0.0,
+         f"crash@sync{crash_sync}/{n_syncs}, identical={identical}, "
+         f"monotone={monotone}")
+    return lane
+
+
+# --------------------------------------------------------------------------- #
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (12 requests, small instances)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-seed", type=int, default=7)
+    ap.add_argument("--fault-rate", type=float, default=None,
+                    help="per-decision fire probability (default 0.15; "
+                    "the gate requires ≥0.1)")
+    ap.add_argument("--skip-device", action="store_true",
+                    help="skip the crash/resume lane (no jax available)")
+    args = ap.parse_args(argv)
+    if args.fault_rate is None:
+        args.fault_rate = 0.15
+
+    # a corrupted incumbent must surface as CertifyFailure, not data — the
+    # chaos claims are meaningless without the certifier in the loop
+    os.environ.setdefault("REPRO_SANITIZE", "1")
+
+    prof = chaos_profile(args.smoke)
+    payload = {"smoke": args.smoke, "seed": args.seed,
+               "profile": {"n_requests": prof.n_requests,
+                           "rate": prof.rate, "walks": prof.walks,
+                           "batch_sizes": list(prof.batch_sizes)},
+               "service": service_lane(args, prof)}
+    if not args.skip_device:
+        payload["crash_resume"] = crash_resume_lane(args)
+
+    svc = payload["service"]
+    gates = {
+        "fault_rate": args.fault_rate,
+        "fault_kinds": len(svc["plan"]["kinds"]),
+        "no_lost_or_dup": all(
+            svc[l]["lost"] == 0 and svc[l]["duplicate_rids"] == 0
+            and svc[l]["terminal_accounted"]
+            for l in ("off", "empty", "faults")),
+        "all_certified": all(svc[l]["certified"]
+                             for l in ("off", "empty", "faults")),
+        "parity_ok": all(svc[l]["parity_ok"]
+                         for l in ("off", "empty", "faults")),
+        "faults_failed_typed": svc["faults"]["failed_types"],
+        "p99_ok": svc["p99_ok"],
+        "p99_fault_free": svc["off"]["latency_p99"],
+        "p99_faults": svc["faults"]["latency_p99"],
+        "overhead_ok": svc["overhead_ok"],
+        "overhead_observed_frac": round(svc["overhead_observed_frac"], 4),
+        "retries": svc["faults"]["resilience"].get("retries", 0),
+    }
+    if "crash_resume" in payload:
+        gates["resume_identical"] = payload["crash_resume"][
+            "resumed_identical"]
+        gates["incumbent_monotone"] = payload["crash_resume"][
+            "incumbent_monotone"]
+
+    path = save_json("BENCH_chaos", payload)
+    append_history("chaos", gates, profile=payload["profile"])
+    print(f"wrote {path}")
+
+    failures = [k for k in ("no_lost_or_dup", "all_certified", "parity_ok",
+                            "p99_ok", "overhead_ok", "resume_identical",
+                            "incumbent_monotone")
+                if k in gates and not gates[k]]
+    if args.fault_rate < 0.1 or gates["fault_kinds"] < 4:
+        failures.append("fault_plan_too_weak")
+    if failures:
+        raise SystemExit("chaos gates failed: " + ", ".join(failures))
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -82,6 +82,43 @@ def certify_incumbents(entries, where: str, *,
     return True
 
 
+COMPILE_BUDGET_ENV = "REPRO_COMPILE_BUDGET_S"
+
+
+def compile_budget_s(default: float = 120.0) -> float:
+    """Per-bucket compile-seconds budget from ``REPRO_COMPILE_BUDGET_S``:
+    unset → a generous CPU default; ``0``/``off`` disables the gate."""
+    raw = os.environ.get(COMPILE_BUDGET_ENV, "").strip().lower()
+    if not raw:
+        return float(default)
+    if raw in ("off", "none", "false", "no"):
+        return 0.0
+    return float(raw)
+
+
+def gate_compile_budget(bench: str, seconds_by_bucket: dict):
+    """Per-bucket compile-time gate (DESIGN §13: a compile storm is a
+    fault mode, not a slow day).  Returns ``(record, breach)``: ``record``
+    merges into the bench's history gates; ``breach`` is an error string
+    or ``None``.  Callers append history *first*, then raise on breach, so
+    a failing run still leaves a queryable record."""
+    budget = compile_budget_s()
+    vals = {str(k): float(v) for k, v in seconds_by_bucket.items()}
+    worst = max(vals.values(), default=0.0)
+    ok = budget <= 0.0 or worst <= budget
+    record = {"compile_budget_s": budget,
+              "compile_worst_bucket_s": round(worst, 3),
+              "compile_budget_ok": ok}
+    breach = None
+    if not ok:
+        over = ", ".join(f"{k}={v:.1f}s" for k, v in sorted(vals.items())
+                         if v > budget)
+        breach = (f"{bench}: per-bucket compile budget {budget:.0f}s "
+                  f"exceeded ({over}) — fix the compile storm or raise "
+                  f"{COMPILE_BUDGET_ENV}")
+    return record, breach
+
+
 @dataclasses.dataclass(frozen=True)
 class Scale:
     n_tasks: tuple[int, int]

@@ -48,7 +48,13 @@ from repro.core import TSParams, random_instance, solve
 from repro.core.greedy import STRATEGIES, construct_greedy
 from repro.core.tabu import tabu_multiwalk, tabu_search
 
-from .common import append_history, certify_incumbents, emit, save_json
+from .common import (
+    append_history,
+    certify_incumbents,
+    emit,
+    gate_compile_budget,
+    save_json,
+)
 
 
 def throughput_params(max_iters: int, seed: int) -> TSParams:
@@ -388,6 +394,13 @@ def main(argv=None) -> dict:
         payload["device_lane"] = device_lane(args, n_tasks, n_data, iters)
         path = save_json("BENCH_search_device", payload)
         lane = payload["device_lane"]
+        # per-bucket compile budget: each jit-compiled launch shape is a
+        # bucket (multiwalk launch; row sweep ≈ cold minus steady-state)
+        budget_rec, breach = gate_compile_budget("search_bench_device", {
+            f"multiwalk_w{lane['walks']}": lane["device"]["compile_seconds"],
+            "row_sweep": max(0.0, lane["row_sweep"]["cold_seconds"]
+                             - lane["row_sweep"]["seconds"]),
+        })
         append_history("search_bench_device", {
             "w1_parity": lane["w1_parity"],
             "throughput_ratio": lane["throughput_ratio"],
@@ -398,9 +411,12 @@ def main(argv=None) -> dict:
             "compile_seconds": lane["device"]["compile_seconds"],
             "compile_cache": compile_cache_on,
             "certified": lane["certified"],
+            **budget_rec,
         }, scale=payload["scale"])
         print(f"wrote {path}  (device {lane['throughput_ratio']:.2f}x numpy, "
               f"parity={lane['w1_parity']})")
+        if breach:
+            raise SystemExit(breach)
         return payload
 
     inst = random_instance(args.seed, n_tasks=n_tasks, n_data=n_data)

@@ -56,7 +56,13 @@ from repro.serve import (
     launch_signature,
 )
 
-from .common import append_history, certify_incumbents, emit, save_json
+from .common import (
+    append_history,
+    certify_incumbents,
+    emit,
+    gate_compile_budget,
+    save_json,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,6 +236,8 @@ def lane(items, arrivals, prof, params, backend, cache_dir):
                    "cuts_by_reason": metrics["cuts_by_reason"],
                    "warmup_compile_seconds":
                        metrics["warmup"].get("compile_seconds", 0.0),
+                   "warmup_per_signature":
+                       metrics["warmup"].get("per_signature", []),
                    "launch_cache": metrics.get("launch_cache"),
                    "incumbent_events": sum(events.values()),
                    "requests_with_events":
@@ -298,8 +306,20 @@ def main(argv=None) -> dict:
         gates[f"{backend}_warmup_compile_seconds"] = \
             ln["served"]["warmup_compile_seconds"]
         gates[f"{backend}_certified"] = ln["certified"]
+    # per-signature compile-second budget: each warm-pool signature is one
+    # bucket; the breach is raised only after the history record lands
+    compile_buckets = {
+        f"{backend}:{'x'.join(map(str, ent['bucket_key']))}":
+            ent["compile_seconds"]
+        for backend, ln in payload["lanes"].items()
+        for ent in ln["served"]["warmup_per_signature"]
+    }
+    budget_rec, breach = gate_compile_budget("serve", compile_buckets)
+    gates.update(budget_rec)
     append_history("serve", gates, profile=payload["profile"])
     print(f"wrote {path}")
+    if breach:
+        raise SystemExit(breach)
 
     for backend, ln in payload["lanes"].items():
         if not ln["parity"]:

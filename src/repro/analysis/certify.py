@@ -523,7 +523,10 @@ def certify_schedule(
     viols += cv
     checked.update(cc)
     checked["makespan"] = 1
-    if reported_makespan is not None and abs(reported_makespan - mk) > tol_abs:
+    # NaN-safe: `not (diff <= tol)` rejects a NaN reported makespan, where
+    # `diff > tol` would silently accept it (every NaN comparison is False)
+    if reported_makespan is not None and \
+            not (abs(reported_makespan - mk) <= tol_abs):
         viols.append(
             Violation(
                 "makespan",

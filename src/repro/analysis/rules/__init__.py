@@ -1,8 +1,8 @@
 """Lint rule registry.
 
 Each rule is a :class:`Rule` with a stable id (``RPR1xx`` = jit/tracing
-discipline, ``RPR2xx`` = validation discipline, ``RPR3xx`` = concurrency
-and randomness discipline), a one-line ``doc`` shown by ``--rules``, an
+discipline, ``RPR2xx`` = validation discipline, ``RPR3xx`` = concurrency,
+randomness, and fault-tolerance discipline), a one-line ``doc`` shown by ``--rules``, an
 ``applies(modpath)`` scope filter over the path relative to the
 ``repro`` package, and ``check(tree, modpath)`` returning findings.
 
@@ -48,8 +48,11 @@ class Rule:
 
 
 def all_rules() -> "list[Rule]":
-    from . import concurrency, jax_discipline, validation
+    from . import concurrency, jax_discipline, robustness, validation
 
     return (
-        jax_discipline.RULES + validation.RULES + concurrency.RULES
+        jax_discipline.RULES
+        + validation.RULES
+        + concurrency.RULES
+        + robustness.RULES
     )

@@ -949,44 +949,87 @@ def device_multiwalk(
     init_labels: list[str] | None = None,
     on_iteration=None,
     on_improvement=None,
+    on_checkpoint=None,
+    resume_from=None,
 ) -> MultiWalkResult:
     """Drop-in ``tabu_multiwalk`` with the round loop on-device.
 
     Callbacks fire at sync boundaries (every ``config.sync_every`` rounds)
     rather than per iteration; Algorithm 3 runs at the same boundaries when
     ``params.mem_update_period < MEM_UPDATE_DISABLED``.
+
+    ``on_checkpoint`` (optional) receives a
+    :class:`~repro.faults.checkpoint.SearchCheckpoint` at every sync
+    boundary (after Alg-3, before the next launch) — the full walk state
+    plus host trajectory.  ``resume_from`` restarts the run from such a
+    checkpoint **bit-identically**: every remaining launch sees exactly the
+    state the uncrashed run would have, so under iteration/eval budgets the
+    final result matches field-for-field (wall-clock fields excepted; a
+    ``time_limit`` budget carries the checkpoint's elapsed over instead of
+    restarting).  Both are None-default and cost nothing when unused
+    (DESIGN.md §13).
     """
     from jax.experimental import enable_x64
 
     params = params or TSParams()
     cfg = config or DeviceConfig()
-    w_count = len(inits)
+    w_count = len(inits) if resume_from is None else int(resume_from.walks)
     if w_count < 1:
         raise ValueError("device_multiwalk needs at least one init")
     labels = init_labels or [f"walk{w}" for w in range(w_count)]
     t0 = time.monotonic()
 
-    cur_sols = [memory_update(inst, init, refresh_every=params.mem_refresh_every,
-                              scalar=params.mem_update_scalar)
-                for init in inits]
-    scheds = [exact_schedule(inst, s) for s in cur_sols]
-    if not all(s is not None for s in scheds):
-        raise ValueError("initial solutions must be acyclic")
+    ckpt_fp = None
+    if on_checkpoint is not None or resume_from is not None:
+        from ..faults import checkpoint as _ckpt
+
+        ckpt_fp = (_ckpt.instance_fingerprint(inst),
+                   _ckpt.params_fingerprint(params))
+    from ..faults import inject as _inject
 
     ip = pack_instance(inst)
-    state = pack_state(ip, cur_sols, scheds, params.seed)
-    crit_cap = cfg.crit_cap or _auto_crit_cap(inst, cur_sols, scheds)
+    if resume_from is not None:
+        _ckpt.check_compatible(resume_from, instance_fp=ckpt_fp[0],
+                               params_fp=ckpt_fp[1], walks=w_count)
+        state = {k: np.array(v) for k, v in resume_from.state.items()}
+        crit_cap = int(resume_from.crit_cap)
+        histories = [list(h) for h in resume_from.histories]
+        g_best = float(resume_from.g_best)
+        g_hist = list(resume_from.g_hist)
+        init_mk_min = float(resume_from.init_mk_min)
+        n_exact_host = int(resume_from.n_exact_host)
+        sync_index = int(resume_from.sync_index)
+        t0 -= float(resume_from.elapsed)  # time budget carries over
+    else:
+        cur_sols = [memory_update(inst, init,
+                                  refresh_every=params.mem_refresh_every,
+                                  scalar=params.mem_update_scalar)
+                    for init in inits]
+        scheds = [exact_schedule(inst, s) for s in cur_sols]
+        if not all(s is not None for s in scheds):
+            raise ValueError("initial solutions must be acyclic")
 
-    best_mk0 = state["best_mk"].copy()
-    histories: list[list[tuple[int, float]]] = [
-        [(0, float(best_mk0[w]))] for w in range(w_count)]
-    g_best = float(best_mk0.min())
-    g_hist: list[tuple[int, float]] = [(0, g_best)]
-    init_mk_min = g_best
+        state = pack_state(ip, cur_sols, scheds, params.seed)
+        crit_cap = cfg.crit_cap or _auto_crit_cap(inst, cur_sols, scheds)
+
+        best_mk0 = state["best_mk"].copy()
+        histories = [[(0, float(best_mk0[w]))] for w in range(w_count)]
+        g_best = float(best_mk0.min())
+        g_hist = [(0, g_best)]
+        init_mk_min = g_best
+        n_exact_host = 0  # host-side Alg-3 re-evals (mirrors legacy +1)
+        sync_index = 0
     mem_updates_on = params.mem_update_period < MEM_UPDATE_DISABLED
     stop_reason = "converged"
-    n_exact_host = 0  # host-side Alg-3 re-evaluations (mirrors legacy +1)
     compile_s = 0.0
+
+    def _snapshot():
+        return _ckpt.snapshot(
+            instance_fp=ckpt_fp[0], params_fp=ckpt_fp[1], walks=w_count,
+            sync_index=sync_index, crit_cap=crit_cap,
+            elapsed=time.monotonic() - t0, n_exact_host=n_exact_host,
+            g_best=g_best, init_mk_min=init_mk_min, g_hist=g_hist,
+            histories=histories, state=state)
 
     def _fire(cb, improved: bool, it: int, cur_min: float) -> bool:
         if cb is None:
@@ -1094,6 +1137,13 @@ def device_multiwalk(
                         if sched_w.makespan < g_best:
                             g_best = float(sched_w.makespan)
                             g_hist.append((it_now, g_best))
+
+            sync_index += 1
+            if on_checkpoint is not None:
+                on_checkpoint(_snapshot())
+            # chaos harness: a seeded plan can lose the device at a sync
+            # boundary — after the checkpoint, so the crash is survivable
+            _inject.fire("device_search.sync", key=sync_index)
 
     best_sols = [
         unpack_solution(ip, state["best_seq"], state["best_seq_len"],

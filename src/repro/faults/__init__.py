@@ -1,0 +1,48 @@
+"""Fault tolerance: failure taxonomy, deterministic injection, and
+crash-surviving search state (DESIGN.md §13).
+
+Three pieces: :mod:`~repro.faults.errors` types every failure the serving
+stack can produce (per-request-attributable, retryability encoded on the
+class); :mod:`~repro.faults.inject` is the seed-keyed deterministic fault
+harness the chaos bench and tests drive (env-gated, zero overhead off);
+:mod:`~repro.faults.checkpoint` snapshots/restores multiwalk search state
+at device sync boundaries so anytime incumbents survive an engine crash.
+"""
+from .checkpoint import (
+    CheckpointMismatch,
+    SearchCheckpoint,
+    instance_fingerprint,
+    params_fingerprint,
+)
+from .errors import (
+    CertifyFailure,
+    CompileTimeout,
+    DeviceLost,
+    EngineCrashed,
+    InfeasibleRequest,
+    LaunchFailure,
+    QueueOverload,
+    ReproError,
+    wrap_error,
+)
+from .inject import FAULT_KINDS, FaultPlan, plan_context, would_fire
+
+__all__ = [
+    "CertifyFailure",
+    "CheckpointMismatch",
+    "CompileTimeout",
+    "DeviceLost",
+    "EngineCrashed",
+    "FAULT_KINDS",
+    "FaultPlan",
+    "InfeasibleRequest",
+    "LaunchFailure",
+    "QueueOverload",
+    "ReproError",
+    "SearchCheckpoint",
+    "instance_fingerprint",
+    "params_fingerprint",
+    "plan_context",
+    "would_fire",
+    "wrap_error",
+]

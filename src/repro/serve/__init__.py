@@ -17,18 +17,35 @@ this package is the *scheduling* service.)
 """
 from .batcher import Batcher, BatchPolicy, CutBatch
 from .compile_cache import enable_compilation_cache
-from .engine import Engine, EngineConfig, RequestResult, WarmSpec
+from .engine import (
+    Engine,
+    EngineConfig,
+    RequestFailure,
+    RequestResult,
+    WarmSpec,
+)
 from .queue import RequestQueue, ServiceClosed, SolveRequest, launch_signature
+from .resilience import (
+    AdmissionPolicy,
+    ResilienceController,
+    ResiliencePolicy,
+    RetryPolicy,
+)
 from .service import SolveService
 
 __all__ = [
+    "AdmissionPolicy",
     "Batcher",
     "BatchPolicy",
     "CutBatch",
     "Engine",
     "EngineConfig",
+    "RequestFailure",
     "RequestResult",
     "RequestQueue",
+    "ResilienceController",
+    "ResiliencePolicy",
+    "RetryPolicy",
     "ServiceClosed",
     "SolveRequest",
     "SolveService",

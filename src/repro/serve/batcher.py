@@ -63,7 +63,11 @@ class Batcher:
         # oldest head first: the signature whose head request has waited
         # longest gets first claim, so shape classes can't starve
         for sig in sorted(groups, key=lambda s: groups[s][0].submitted):
-            reqs = groups[sig]
+            # requests still backing off after a failed attempt are not
+            # dispatchable yet and must not trigger (or join) a cut
+            reqs = tuple(r for r in groups[sig] if r.not_before <= now)
+            if not reqs:
+                continue
             if len(reqs) >= pol.max_batch:
                 reason = "full"
             elif self.queue.closed:
@@ -78,7 +82,7 @@ class Batcher:
                 reason = "idle"
             else:
                 continue
-            taken = self.queue.take(sig, pol.max_batch)
+            taken = self.queue.take_ready(sig, pol.max_batch, now)
             if not taken:
                 continue  # raced with another consumer
             self.cuts_by_reason[reason] += 1
@@ -93,8 +97,11 @@ class Batcher:
         pol = self.policy
         t = None
         for reqs in self.queue.groups().values():
-            cands = [reqs[0].submitted + pol.max_wait]
-            cands += [r.deadline - pol.deadline_slack
+            # a backing-off request becomes cuttable at its not_before (its
+            # age threshold has long passed by then)
+            cands = [max(r.not_before, reqs[0].submitted + pol.max_wait)
+                     for r in reqs]
+            cands += [max(r.not_before, r.deadline - pol.deadline_slack)
                       for r in reqs if r.deadline is not None]
             g = min(cands)
             t = g if t is None else min(t, g)

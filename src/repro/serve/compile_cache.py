@@ -21,18 +21,24 @@ def enable_compilation_cache(path) -> bool:
     the persistent cache as strictly best-effort."""
     try:
         import jax
+    # lint: allow[RPR303] DESIGN §13: best-effort cache wiring outside
+    # the request path — no ReproError can flow here
     except Exception:
         return False
     p = Path(path)
     p.mkdir(parents=True, exist_ok=True)
     try:
         jax.config.update("jax_compilation_cache_dir", str(p))
+    # lint: allow[RPR303] DESIGN §13: best-effort cache knob on a jax
+    # build without it; no request in flight
     except Exception:
         return False
     for knob, val in (("jax_persistent_cache_min_compile_time_secs", 0.0),
                       ("jax_persistent_cache_min_entry_size_bytes", -1)):
         try:
             jax.config.update(knob, val)
+        # lint: allow[RPR303] DESIGN §13: optional floor knobs on older
+        # jax; cache still works, no request in flight
         except Exception:
             pass  # older jax: floors stay at defaults; the cache still works
     return True

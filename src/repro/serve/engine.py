@@ -36,12 +36,14 @@ from ..core.api import (
 )
 from ..core.mdfg import Instance
 from ..core.tabu import TSParams
+from ..faults import inject as _inject
+from ..faults.errors import ReproError, wrap_error
 from .batcher import CutBatch
 from .compile_cache import enable_compilation_cache
 from .queue import SolveRequest, launch_signature
 
-__all__ = ["EngineConfig", "WarmSpec", "RequestResult", "AssembledBatch",
-           "Engine"]
+__all__ = ["EngineConfig", "WarmSpec", "RequestResult", "RequestFailure",
+           "AssembledBatch", "Engine"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,9 +90,21 @@ class RequestResult:
 
 
 @dataclasses.dataclass
+class RequestFailure:
+    """Per-lane failure: one request's typed, attributable error.  The
+    engine returns these *alongside* sibling successes, so one bad lane
+    never takes a cut down (DESIGN.md §13)."""
+
+    request: SolveRequest
+    error: ReproError
+
+
+@dataclasses.dataclass
 class AssembledBatch:
     """Host-side prepared work for one cut (built while the device runs
-    the previous launch)."""
+    the previous launch).  ``requests`` are the lanes that survived
+    assembly; ``failures`` carries per-request assembly errors (infeasible
+    constructions) already attributed."""
 
     cut: CutBatch
     instances: list
@@ -100,6 +114,13 @@ class AssembledBatch:
     batch: object  # InstanceBatch on the device backend, else None
     padded_to: int
     assemble_seconds: float
+    requests: "list | None" = None      # None = every request in the cut
+    failures: list = dataclasses.field(default_factory=list)
+    backend: "str | None" = None        # None = the engine's configured one
+
+    @property
+    def live_requests(self) -> list:
+        return self.cut.requests if self.requests is None else self.requests
 
 
 class Engine:
@@ -149,6 +170,7 @@ class Engine:
             if sig in seen:
                 continue
             seen.add(sig)
+            _inject.fire("engine.warmup.compile", key=len(seen))
             batch = self._make_batch([spec.instance], sig)
             cap = self.config.crit_cap or batch.n_b
             ts = _budgeted_ts_params(self.params, spec.budget,
@@ -170,44 +192,81 @@ class Engine:
         return self.warm_info
 
     # -- per-cut pipeline --------------------------------------------------
-    def assemble(self, cut: CutBatch) -> AssembledBatch:
+    def assemble(self, cut: CutBatch,
+                 backend: "str | None" = None) -> AssembledBatch:
         """Host-side batch prep: walk inits per request (exactly
         ``multiwalk_inits`` — the solo path's starts), quantized padding,
         and the pinned-shape ``InstanceBatch``.  Runs concurrently with the
-        previous launch's device compute."""
+        previous launch's device compute.
+
+        A request whose construction fails (e.g. ``InfeasibleInstanceError``
+        from the greedy init) is attributed into ``failures`` and the rest
+        of the cut proceeds — one bad instance never takes a batch down.
+        ``backend`` overrides the configured one (the service routes
+        poisoned signatures to the numpy fallback)."""
         t0 = time.monotonic()
+        backend = backend or self.config.backend
         reqs = cut.requests
         walks = reqs[0].walks
         ts = _budgeted_ts_params(self.params, reqs[0].budget, reqs[0].seed)
-        instances = [r.instance for r in reqs]
-        seeds = [r.seed for r in reqs]
-        inits = [multiwalk_inits(r.instance, walks, r.seed)[0] for r in reqs]
+        good: "list[SolveRequest]" = []
+        failures: "list[RequestFailure]" = []
+        instances, seeds, inits = [], [], []
+        for r in reqs:
+            try:
+                ini = multiwalk_inits(r.instance, walks, r.seed)[0]
+            except Exception as e:
+                # typed per-lane attribution (wrap_error → InfeasibleRequest
+                # etc.); siblings keep assembling — DESIGN §13 blast radius
+                failures.append(RequestFailure(r, wrap_error(e, rid=r.rid)))
+                continue
+            good.append(r)
+            instances.append(r.instance)
+            seeds.append(r.seed)
+            inits.append(ini)
         batch = None
-        padded_to = len(reqs)
-        if self.config.backend == "device":
-            padded_to = self._quantized_size(len(reqs))
+        padded_to = len(good)
+        if backend == "device" and good:
+            padded_to = self._quantized_size(len(good))
             while len(instances) < padded_to:
                 # pad lanes repeat the last request; vmap batch identity
                 # keeps them from touching real lanes, and fan-out drops them
-                instances.append(reqs[-1].instance)
-                inits.append([s.copy() for s in inits[len(reqs) - 1]])
-                seeds.append(reqs[-1].seed)
+                instances.append(good[-1].instance)
+                inits.append([s.copy() for s in inits[len(good) - 1]])
+                seeds.append(good[-1].seed)
             batch = self._make_batch(instances, cut.signature)
         return AssembledBatch(cut=cut, instances=instances, inits=inits,
                               seeds=seeds, params=ts, batch=batch,
                               padded_to=padded_to,
-                              assemble_seconds=time.monotonic() - t0)
+                              assemble_seconds=time.monotonic() - t0,
+                              requests=good, failures=failures,
+                              backend=backend)
 
     def execute(self, assembled: AssembledBatch,
-                callbacks: "list | None" = None) -> "list[RequestResult]":
-        """Run one assembled batch and fan results out per request.
-        ``callbacks[i]`` (``Callbacks``-shaped, optional) receives request
-        ``i``'s anytime events at sync boundaries."""
+                callbacks: "list | None" = None) -> "list":
+        """Run one assembled batch and fan results out per request as a
+        mixed list of :class:`RequestResult` / :class:`RequestFailure` —
+        a failed lane is attributed, never contagious.  ``callbacks[i]``
+        (``Callbacks``-shaped, optional) aligns with ``cut.requests`` and
+        receives request ``i``'s anytime events at sync boundaries."""
         cut = assembled.cut
-        reqs = cut.requests
+        reqs = assembled.live_requests
+        backend = assembled.backend or self.config.backend
+        cb_by_rid: dict = {}
+        if callbacks is not None:
+            cb_by_rid = {r.rid: cb
+                         for r, cb in zip(cut.requests, callbacks)}
         t0 = time.monotonic()
-        results: "list[RequestResult]" = []
-        if self.config.backend == "device":
+        results: "list" = list(assembled.failures)
+        if not reqs:
+            self.n_batches += 1
+            return results
+        # chaos harness: a whole-launch fault is attributable only when the
+        # cut has a single lane (key the decision on the head rid so the
+        # schedule is stable under re-dispatch)
+        _inject.fire("engine.execute.launch", key=reqs[0].rid,
+                     rid=reqs[0].rid if len(reqs) == 1 else None)
+        if backend == "device":
             from ..core.device_search import (
                 DeviceConfig,
                 launch_cache_info,
@@ -218,7 +277,7 @@ class Engine:
             cap = self.config.crit_cap or assembled.batch.n_b
             cbs = None
             if callbacks is not None:
-                cbs = list(callbacks) + \
+                cbs = [cb_by_rid.get(r.rid) for r in reqs] + \
                     [None] * (assembled.padded_to - len(reqs))
             rs = solve_instances(
                 assembled.batch, assembled.inits, assembled.params,
@@ -233,15 +292,23 @@ class Engine:
             for i, r in enumerate(reqs):  # pad lanes i >= len(reqs) dropped
                 rep = _report_from_multiwalk("tabu_device", r.instance,
                                              rs[i], "device", wall)
-                results.append(self._result(r, rep, assembled, wall, delta))
+                results.append(self._lane_result(r, rep, assembled, wall,
+                                                 delta))
         else:
-            for i, r in enumerate(reqs):
-                cb = (callbacks[i] if callbacks else None) or Callbacks()
-                rep = solve(r.instance, "tabu_multiwalk", walks=r.walks,
-                            budget=r.budget, seed=r.seed, callbacks=cb,
-                            params=self.params)
-                results.append(self._result(r, rep, assembled,
-                                            time.monotonic() - t0, {}))
+            for r in reqs:
+                cb = cb_by_rid.get(r.rid) or Callbacks()
+                try:
+                    rep = solve(r.instance, "tabu_multiwalk", walks=r.walks,
+                                budget=r.budget, seed=r.seed, callbacks=cb,
+                                params=self.params)
+                except Exception as e:
+                    # per-lane attribution: this request fails typed
+                    # (wrap_error), its siblings still get their results
+                    results.append(RequestFailure(r, wrap_error(e,
+                                                                rid=r.rid)))
+                    continue
+                results.append(self._lane_result(r, rep, assembled,
+                                                 time.monotonic() - t0, {}))
         self.n_batches += 1
         self.n_requests += len(reqs)
         return results
@@ -252,8 +319,31 @@ class Engine:
         return os.environ.get("REPRO_SANITIZE", "").strip().lower() not in (
             "", "0", "false", "no", "off")
 
+    def _lane_result(self, req, report, assembled, wall, cache_delta):
+        """Build one lane's result, converting a certification failure into
+        that lane's typed :class:`RequestFailure` (CertifyFailure carrying
+        the sanitizer's certificate as ``__cause__``)."""
+        try:
+            return self._result(req, report, assembled, wall, cache_delta)
+        except Exception as e:
+            return RequestFailure(req, wrap_error(e, rid=req.rid))
+
     def _result(self, req, report, assembled, wall, cache_delta):
         cut = assembled.cut
+        # chaos harness: corrupt the served incumbent / NaN the reported
+        # makespan *before* certification, so sanitize mode must catch it
+        assign2 = _inject.corrupt("engine.result.incumbent",
+                                  report.solution.assign, key=req.rid)
+        mk2 = _inject.nan_value("engine.result.makespan",
+                                float(report.makespan), key=req.rid)
+        corrupted = assign2 is not report.solution.assign \
+            or mk2 != float(report.makespan)
+        if corrupted:
+            report = dataclasses.replace(
+                report,
+                solution=dataclasses.replace(report.solution, assign=assign2),
+                makespan=mk2,
+                extras={**report.extras, "certified": False})
         certified = bool(report.extras.get("certified"))
         if not certified and self._sanitize_flag():
             # the report may have been built with the env flag off (e.g.
@@ -270,7 +360,7 @@ class Engine:
         return RequestResult(request=req, report=report, metrics={
             "certified": certified,
             "rid": req.rid,
-            "backend": self.config.backend,
+            "backend": assembled.backend or self.config.backend,
             "cut_reason": cut.reason,
             "batch_size": len(cut.requests),
             "padded_to": assembled.padded_to,

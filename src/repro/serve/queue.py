@@ -84,9 +84,24 @@ class SolveRequest:
     submitted: float
     deadline: "float | None"
     signature: tuple = dataclasses.field(repr=False)
+    # resilience bookkeeping (DESIGN.md §13): failed attempts so far, wall
+    # seconds burned across them (budget carry-over), earliest re-dispatch
+    # time after backoff, and whether blast-radius isolation demands this
+    # request be cut alone on its next launch
+    attempts: int = 0
+    spent: float = 0.0
+    not_before: float = 0.0
+    isolated: bool = False
 
     def age(self, now: float) -> float:
         return now - self.submitted
+
+    def time_left(self) -> "float | None":
+        """Remaining wall budget after prior failed attempts (None =
+        unbounded ``Budget.time_limit``)."""
+        if self.budget.time_limit is None:
+            return None
+        return float(self.budget.time_limit) - self.spent
 
 
 class RequestQueue:
@@ -132,6 +147,16 @@ class RequestQueue:
         return self.put(self.make_request(instance, budget, seed=seed,
                                           walks=walks, deadline=deadline))
 
+    def requeue(self, req: SolveRequest) -> SolveRequest:
+        """Re-enqueue an already-admitted request (retry / blast-radius
+        re-dispatch).  Bypasses the closed check — the request was accepted
+        before intake closed, and drain owes it an answer — and does not
+        recount it in ``n_submitted``."""
+        with self._cond:
+            self._groups.setdefault(req.signature, []).append(req)
+            self._cond.notify_all()
+        return req
+
     def close(self) -> None:
         """Stop accepting new requests (pending ones stay queued)."""
         with self._cond:
@@ -157,6 +182,31 @@ class RequestQueue:
         with self._cond:
             g = self._groups.get(signature, [])
             out, rest = g[:n], g[n:]
+            if rest:
+                self._groups[signature] = rest
+            elif signature in self._groups:
+                del self._groups[signature]
+            return out
+
+    def take_ready(self, signature: tuple, n: int,
+                   now: float) -> "list[SolveRequest]":
+        """Pop up to ``n`` *dispatchable* requests of one signature: skips
+        requests still backing off (``not_before > now``), and cuts an
+        ``isolated`` request alone (blast-radius re-dispatch must identify
+        the offender, so it may not share a launch)."""
+        with self._cond:
+            g = self._groups.get(signature, [])
+            out: "list[SolveRequest]" = []
+            rest: "list[SolveRequest]" = []
+            for r in g:
+                if r.not_before > now or len(out) >= n \
+                        or (r.isolated and out):
+                    rest.append(r)
+                elif r.isolated:
+                    out.append(r)
+                    n = 1  # nothing else joins this cut
+                else:
+                    out.append(r)
             if rest:
                 self._groups[signature] = rest
             elif signature in self._groups:

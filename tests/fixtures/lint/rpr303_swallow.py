@@ -1,0 +1,41 @@
+"""RPR303 fixture: broad handlers that swallow vs. route typed errors."""
+from repro.faults.errors import LaunchFailure, wrap_error
+
+
+def bad_swallow(launch):
+    try:
+        return launch()
+    except Exception:
+        return None  # RPR303: typed ReproErrors vanish here
+
+
+def good_reraise(launch):
+    try:
+        return launch()
+    except Exception:
+        raise
+
+
+def good_wraps(launch, rid):
+    try:
+        return launch()
+    except Exception as e:
+        return wrap_error(e, rid=rid)
+
+
+def good_typed_peel_then_backstop(launch, log):
+    try:
+        return launch()
+    except LaunchFailure as e:
+        log(e)
+        return None
+    except Exception:
+        # the typed errors were peeled off above; this backstop is fine
+        return None
+
+
+def good_narrow(mapping, key):
+    try:
+        return mapping[key]
+    except KeyError:
+        return None

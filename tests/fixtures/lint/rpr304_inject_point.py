@@ -1,0 +1,27 @@
+"""RPR304 fixture: injection-point literals vs. the inject.py registry."""
+from repro.faults import inject as _inject
+from repro.faults.inject import fire
+
+
+def bad_unregistered(rid):
+    _inject.fire("engine.execute.lunch", rid=rid)  # RPR304: typo'd point
+
+
+def good_registered(rid):
+    _inject.fire("engine.execute.launch", rid=rid)
+    fire("engine.warmup.compile", key=rid)
+
+
+def good_dynamic(point, rid):
+    # non-literal point: the runtime registry check owns this path
+    _inject.fire(point, rid=rid)
+
+
+class _Missile:
+    def fire(self, point):
+        return point
+
+
+def good_unrelated_fire():
+    # `fire` on an object that is not the inject module must not match
+    return _Missile().fire("not.a.point")

@@ -29,6 +29,8 @@ CASES = [
     ("rpr201_assert.py", "core/fixture.py", "RPR201", 2),
     ("rpr301_serve_lock.py", "serve/fixture.py", "RPR301", 1),
     ("rpr302_np_random.py", "core/fixture.py", "RPR302", 1),
+    ("rpr303_swallow.py", "serve/fixture.py", "RPR303", 1),
+    ("rpr304_inject_point.py", "serve/fixture.py", "RPR304", 1),
 ]
 
 

@@ -1,0 +1,228 @@
+"""Hypothesis property tests for the resilience layer (DESIGN.md §13).
+
+Two levels: the :class:`ResilienceController` driven directly with
+arbitrary fault/clock interleavings (pure, no threads), and the whole
+numpy-backend service under arbitrary seeded fault plans.  The invariant
+is the same at both: **every request reaches exactly one terminal state**
+— a result or a typed ``ReproError`` — no matter which faults fire when.
+Separate file so tier-1 still collects without ``hypothesis`` (optional
+dev dependency, present in CI)."""
+import asyncio
+import os
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import Budget, random_instance  # noqa: E402
+from repro.faults import FaultPlan, ReproError, plan_context  # noqa: E402
+from repro.faults.errors import (  # noqa: E402
+    DeviceLost,
+    InfeasibleRequest,
+    LaunchFailure,
+)
+from repro.serve import (  # noqa: E402
+    AdmissionPolicy,
+    BatchPolicy,
+    EngineConfig,
+    ResilienceController,
+    ResiliencePolicy,
+    RetryPolicy,
+    SolveService,
+)
+
+# --------------------------------------------------------------------------- #
+# controller level: arbitrary fault/clock interleavings                       #
+# --------------------------------------------------------------------------- #
+_ERRORS = [
+    lambda rid: LaunchFailure("launch", rid=rid),
+    lambda rid: DeviceLost("lost", rid=rid),
+    lambda rid: InfeasibleRequest("no fit", rid=rid),
+    lambda rid: ValueError("untyped"),  # wrap_error → LaunchFailure
+]
+
+# one lifecycle event: (rid, signature index, error index or None=success,
+# clock advance)
+event = st.tuples(st.integers(0, 5), st.integers(0, 2),
+                  st.one_of(st.none(), st.integers(0, len(_ERRORS) - 1)),
+                  st.floats(0.0, 3.0))
+
+
+@settings(max_examples=60, deadline=None)
+@given(events=st.lists(event, min_size=1, max_size=60),
+       max_attempts=st.integers(1, 5),
+       poison_after=st.integers(1, 4),
+       time_limit=st.one_of(st.none(), st.floats(0.05, 5.0)))
+def test_every_request_terminates_exactly_once(
+        events, max_attempts, poison_after, time_limit):
+    """Drive requests through arbitrary failure/success/clock sequences:
+    each rid ends terminal exactly once, attempts never exceed the policy,
+    backoffs respect the clock, and poisoning is monotone (sticky)."""
+    pol = ResiliencePolicy(retry=RetryPolicy(max_attempts=max_attempts,
+                                             poison_after=poison_after))
+    ctl = ResilienceController(pol)
+    pr = pol.retry
+    now = 0.0
+    attempts = {}           # rid -> failures so far
+    spent = {}              # rid -> consumed wall budget
+    terminal = {}           # rid -> "ok" | "fail"
+    was_poisoned = set()
+    for rid, sig_i, err_i, dt in events:
+        now += dt
+        sig = ("sig", sig_i)
+        if rid in terminal:
+            continue  # a terminal request never re-enters the controller
+        # poisoning never un-happens
+        assert was_poisoned <= set(ctl.poisoned)
+        if err_i is None:
+            ctl.on_success(sig)
+            terminal[rid] = "ok"
+            continue
+        attempts[rid] = attempts.get(rid, 0) + 1
+        spent[rid] = spent.get(rid, 0.0) + dt
+        time_left = None if time_limit is None else time_limit - spent[rid]
+        d = ctl.on_failure(rid=rid, signature=sig, attempts=attempts[rid],
+                           exc=_ERRORS[err_i](rid), now=now,
+                           time_left=time_left)
+        was_poisoned |= set(ctl.poisoned)
+        assert d.action in ("retry", "fail")
+        if d.action == "fail":
+            assert isinstance(d.error, ReproError)
+            terminal[rid] = "fail"
+            # a terminal failure is justified: not retryable, attempts
+            # exhausted, or no wall budget left for the backoff
+            backoff = min(pr.backoff_max,
+                          pr.backoff_base
+                          * pr.backoff_factor ** (attempts[rid] - 1))
+            assert (not d.error.retryable
+                    or attempts[rid] >= pr.max_attempts
+                    or (time_left is not None and time_left <= backoff))
+        else:
+            # retries only for retryable errors, within budget, with a
+            # strictly-future, bounded backoff
+            assert attempts[rid] < pr.max_attempts
+            assert now < d.not_before <= now + pr.backoff_max
+    # bookkeeping agrees with the ledger
+    m = ctl.metrics()
+    assert m["failed"] == sum(1 for v in terminal.values() if v == "fail")
+    assert m["poisoned_signatures"] == len(ctl.poisoned)
+    assert all(attempts[rid] <= pr.max_attempts for rid in attempts)
+
+
+@settings(max_examples=40, deadline=None)
+@given(depths=st.lists(st.integers(0, 300), min_size=1, max_size=30),
+       max_depth=st.integers(0, 256),
+       deadline_offsets=st.lists(
+           st.one_of(st.none(), st.floats(-2.0, 2.0)),
+           min_size=1, max_size=30))
+def test_admission_sheds_exactly_the_hopeless(depths, max_depth,
+                                              deadline_offsets):
+    ctl = ResilienceController(ResiliencePolicy(
+        admission=AdmissionPolicy(max_queue_depth=max_depth,
+                                  retry_after=0.25)))
+    now = 10.0
+    n = min(len(depths), len(deadline_offsets))
+    for depth, off in zip(depths[:n], deadline_offsets[:n]):
+        deadline = None if off is None else now + off
+        shed = ctl.admit(depth=depth, now=now, deadline=deadline)
+        over = bool(max_depth) and depth >= max_depth
+        hopeless = deadline is not None and deadline <= now
+        if over or hopeless:
+            assert shed is not None and shed.retry_after == 0.25
+            assert not shed.retryable  # the *request* must not auto-retry
+        else:
+            assert shed is None
+    assert ctl.metrics()["shed"] <= n
+
+
+@settings(max_examples=40, deadline=None)
+@given(seq=st.lists(st.sampled_from(["fail", "ok"]), min_size=1,
+                    max_size=12),
+       poison_after=st.integers(1, 5))
+def test_poisoning_is_sticky_and_streak_based(seq, poison_after):
+    """use_fallback flips on after ``poison_after`` *consecutive* launch
+    failures on a signature and never flips back — on_success clears the
+    streak only before poisoning."""
+    ctl = ResilienceController(ResiliencePolicy(
+        retry=RetryPolicy(max_attempts=10**6, poison_after=poison_after)))
+    sig, streak, rid = "sig", 0, 0
+    for step in seq:
+        if step == "fail":
+            rid += 1
+            ctl.on_failure(rid=rid, signature=sig, attempts=1,
+                           exc=LaunchFailure("x", rid=rid), now=0.0)
+            streak += 1
+            if streak >= poison_after:
+                assert ctl.use_fallback(sig)
+        else:
+            ctl.on_success(sig)
+            if not ctl.use_fallback(sig):
+                streak = 0
+        if ctl.use_fallback(sig):
+            # sticky: once poisoned, success does not heal it
+            ctl.on_success(sig)
+            assert ctl.use_fallback(sig)
+
+
+# --------------------------------------------------------------------------- #
+# service level: arbitrary seeded fault plans                                 #
+# --------------------------------------------------------------------------- #
+_INSTANCES = [random_instance(s, n_tasks=16, n_data=40) for s in range(4)]
+_KINDS = ("launch_error", "device_lost", "compile_hang",
+          "corrupt_incumbent", "nan_duration", "clock_skew")
+
+
+@settings(max_examples=6, deadline=None)
+@given(fault_seed=st.integers(0, 2**16),
+       rate=st.floats(0.05, 0.6),
+       kinds=st.sets(st.sampled_from(_KINDS), min_size=1).map(tuple))
+def test_service_never_loses_or_duplicates_requests(fault_seed, rate, kinds):
+    """The whole numpy service under an arbitrary plan: every submitted
+    request resolves exactly once, as a result or a typed ReproError."""
+    budget = Budget(max_iters=2)
+    plan = FaultPlan(seed=fault_seed, rate=rate, kinds=kinds,
+                     hang_seconds=0.01, skew_seconds=0.2)
+    # sanitize on, so injected corruption surfaces as CertifyFailure
+    # instead of flowing through as data (hypothesis forbids the
+    # function-scoped monkeypatch fixture, hence manual save/restore)
+    prev = os.environ.get("REPRO_SANITIZE")
+
+    async def run():
+        svc = SolveService(
+            config=EngineConfig(backend="numpy", batch_sizes=(2,)),
+            policy=BatchPolicy(max_batch=2, max_wait=0.005))
+        await svc.start()
+        rids = [await svc.submit(inst, budget, seed=i, walks=1)
+                for i, inst in enumerate(_INSTANCES)]
+        outs = {}
+        for rid in rids:
+            try:
+                outs[rid] = await asyncio.wait_for(svc.result(rid),
+                                                   timeout=60.0)
+            except ReproError as e:
+                outs[rid] = e
+        await svc.shutdown()
+        return rids, outs, svc.metrics()
+
+    os.environ["REPRO_SANITIZE"] = "1"
+    try:
+        with plan_context(plan):
+            rids, outs, metrics = asyncio.run(run())
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_SANITIZE", None)
+        else:
+            os.environ["REPRO_SANITIZE"] = prev
+
+    assert len(rids) == len(set(rids)) == len(_INSTANCES)  # no duplicates
+    assert set(outs) == set(rids)                          # no losses
+    for rid, out in outs.items():
+        if isinstance(out, ReproError):
+            assert out.rid == rid  # terminal failures stay attributed
+        else:
+            assert out.request.rid == rid
+            assert np.isfinite(out.report.makespan)
+    n_failed = sum(isinstance(o, ReproError) for o in outs.values())
+    assert metrics["failed"] == n_failed
